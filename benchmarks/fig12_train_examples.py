@@ -1,0 +1,27 @@
+"""Fig. 12: number of triplet-training examples vs performance."""
+import numpy as np
+
+from benchmarks import common
+from repro.core.queries.aggregation import aggregate_control_variates
+from repro.core.queries.limit import limit_query
+
+
+def run(quick: bool = False):
+    rows = []
+    ds = "night-street"
+    wl = common.get_workload(ds, quick)
+    truth_cnt = common.truth_vector(wl, "score_count")
+    rare_fn = common.rare_event_fn(wl, ds)
+    truth_rare = np.asarray([rare_fn(r) for r in
+                             wl.target_dnn_batch(range(len(wl.features)))])
+    sweeps = (100, 300) if quick else (100, 200, 400, 800)
+    for n_train in sweeps:
+        sv = common.get_tasti(ds, "T", quick, n_train=n_train)
+        agg = aggregate_control_variates(sv.proxy_scores(wl.score_count),
+                                         lambda i: truth_cnt[i], err=0.05,
+                                         seed=0).n_invocations
+        lim = limit_query(sv.proxy_scores(rare_fn, mode="top1"),
+                          lambda i: truth_rare[i], k_results=5, batch=4).n_invocations
+        rows.append((f"fig12/train{n_train}/agg", "invocations", agg))
+        rows.append((f"fig12/train{n_train}/limit", "invocations", lim))
+    return rows

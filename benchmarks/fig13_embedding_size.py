@@ -1,0 +1,27 @@
+"""Fig. 13: embedding size vs performance."""
+import numpy as np
+
+from benchmarks import common
+from repro.core.queries.aggregation import aggregate_control_variates
+from repro.core.queries.limit import limit_query
+
+
+def run(quick: bool = False):
+    rows = []
+    ds = "night-street"
+    wl = common.get_workload(ds, quick)
+    truth_cnt = common.truth_vector(wl, "score_count")
+    rare_fn = common.rare_event_fn(wl, ds)
+    truth_rare = np.asarray([rare_fn(r) for r in
+                             wl.target_dnn_batch(range(len(wl.features)))])
+    sweeps = (32, 128) if quick else (32, 64, 128, 256)
+    for dim in sweeps:
+        sv = common.get_tasti(ds, "T", quick, embed_dim=dim)
+        agg = aggregate_control_variates(sv.proxy_scores(wl.score_count),
+                                         lambda i: truth_cnt[i], err=0.05,
+                                         seed=0).n_invocations
+        lim = limit_query(sv.proxy_scores(rare_fn, mode="top1"),
+                          lambda i: truth_rare[i], k_results=5, batch=4).n_invocations
+        rows.append((f"fig13/dim{dim}/agg", "invocations", agg))
+        rows.append((f"fig13/dim{dim}/limit", "invocations", lim))
+    return rows

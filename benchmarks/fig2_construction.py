@@ -1,0 +1,30 @@
+"""Fig. 2: index-construction time breakdown — TASTI vs BlazeIt's TMAS.
+
+TASTI = target-DNN annotations (train set + reps) + embedding + training +
+distance computation; BlazeIt = target DNN over the TMAS (10x budget).
+Seconds come from the paper-measured cost model (3 fps target, 12k fps
+embedder); the ratio is the reproduced claim (paper: ~10x cheaper).
+"""
+import numpy as np
+
+from benchmarks import common
+from repro.core.schema import TARGET_DNN_COST_S
+
+
+def run(quick: bool = False):
+    rows = []
+    sys_t = common.get_tasti("night-street", "T", quick)
+    bd = sys_t.index.cost.breakdown()
+    for part, secs in bd.items():
+        rows.append((f"fig2/tasti/{part}", "seconds", round(secs, 2)))
+    tasti_total = sum(bd.values())
+    rows.append(("fig2/tasti/total", "seconds", round(tasti_total, 2)))
+    wl = common.get_workload("night-street", quick)
+    tmas = common.BLAZEIT_BUDGET_FACTOR * sys_t.index.cost.target_invocations
+    tmas = min(tmas, len(wl.features))
+    blazeit_total = tmas * TARGET_DNN_COST_S
+    rows.append(("fig2/blazeit/target_dnn_s", "seconds", round(blazeit_total, 2)))
+    rows.append(("fig2/blazeit/total", "seconds", round(blazeit_total, 2)))
+    rows.append(("fig2/construction_speedup", "ratio",
+                 round(blazeit_total / tasti_total, 2)))
+    return rows

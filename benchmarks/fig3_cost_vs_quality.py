@@ -1,0 +1,33 @@
+"""Fig. 3: construction cost vs aggregation performance for a range of TASTI
+parameters vs the BlazeIt point."""
+import numpy as np
+
+from benchmarks import common
+from repro.core.queries.aggregation import aggregate_control_variates
+from repro.core.schema import TARGET_DNN_COST_S
+
+
+def run(quick: bool = False):
+    rows = []
+    wl = common.get_workload("night-street", quick)
+    truth = common.truth_vector(wl, "score_count")
+    for n_reps in ((150, 300) if quick else (200, 400, 800, 1600)):
+        sys_t = common.get_tasti("night-street", "T", quick, n_reps=n_reps)
+        proxy = sys_t.proxy_scores(wl.score_count)
+        res = aggregate_control_variates(proxy, sys_t.oracle(wl.score_count),
+                                         err=0.05, seed=0)
+        cost = sys_t.index.cost.wall_clock_s()
+        rows.append((f"fig3/tasti_reps{n_reps}/construction", "seconds",
+                     round(cost, 1)))
+        rows.append((f"fig3/tasti_reps{n_reps}/agg_invocations", "count",
+                     res.n_invocations))
+    bl = common.get_blazeit_scores("night-street", "score_count", quick)
+    res_b = aggregate_control_variates(
+        bl, lambda ids: truth[ids], err=0.05, seed=0)
+    budget = common.BLAZEIT_BUDGET_FACTOR * (
+        (150 if quick else common.N_TRAIN) + (300 if quick else common.N_REPS))
+    budget = min(budget, len(wl.features))
+    rows.append(("fig3/blazeit/construction", "seconds",
+                 round(budget * TARGET_DNN_COST_S, 1)))
+    rows.append(("fig3/blazeit/agg_invocations", "count", res_b.n_invocations))
+    return rows

@@ -1,0 +1,37 @@
+"""Fig. 4: target-DNN invocations for aggregation queries (lower is better):
+random sampling, BlazeIt proxy (10x construction budget), TASTI-PT, TASTI-T.
+"""
+import numpy as np
+
+from benchmarks import common
+from repro.core.queries.aggregation import aggregate_control_variates
+
+
+def run(quick: bool = False):
+    rows = []
+    err = 0.05
+    for ds in common.ALL_SETS:
+        wl = common.get_workload(ds, quick)
+        attr = common.agg_score_attr(ds)
+        truth = common.truth_vector(wl, attr)
+        oracle = lambda ids: truth[ids]
+        seeds = range(2 if quick else 3)
+
+        def mean_inv(proxy, use_cv=True):
+            return float(np.mean([aggregate_control_variates(
+                proxy, oracle, err=err, seed=s, use_cv=use_cv).n_invocations
+                for s in seeds]))
+
+        rnd = mean_inv(np.zeros(len(truth)), use_cv=False)
+        rows.append((f"fig4/{ds}/random", "invocations", rnd))
+        bl = common.get_blazeit_scores(ds, attr, quick)
+        rows.append((f"fig4/{ds}/blazeit", "invocations", mean_inv(bl)))
+        for variant in ("PT", "T"):
+            sv = common.get_tasti(ds, variant, quick)
+            proxy = sv.proxy_scores(getattr(wl, attr))
+            rows.append((f"fig4/{ds}/tasti_{variant.lower()}", "invocations",
+                         mean_inv(proxy)))
+            if variant == "T":
+                rho2 = float(np.corrcoef(proxy, truth)[0, 1] ** 2)
+                rows.append((f"fig4/{ds}/tasti_t_rho2", "rho2", round(rho2, 3)))
+    return rows

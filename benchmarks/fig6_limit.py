@@ -1,0 +1,41 @@
+"""Fig. 6: target-DNN invocations for limit queries over rare events (lower is
+better).  TASTI uses k=1 propagation with distance tie-breaks (paper §6.3).
+"""
+import numpy as np
+
+from benchmarks import common
+from repro.core.queries.limit import limit_query
+
+
+def run(quick: bool = False):
+    rows = []
+    for ds in common.ALL_SETS:
+        wl = common.get_workload(ds, quick)
+        score_fn = common.rare_event_fn(wl, ds)
+        n = len(wl.features)
+        truth = np.asarray([score_fn(r) for r in wl.target_dnn_batch(range(n))])
+        total_rare = int(truth.sum())
+        if total_rare == 0:
+            rows.append((f"fig6/{ds}/rare_total", "count", 0))
+            continue
+        want = min(10, max(1, total_rare // 2))
+        oracle = lambda ids: truth[ids]
+        rows.append((f"fig6/{ds}/rare_total", "count", total_rare))
+
+        rng = np.random.default_rng(0)
+        res_r = limit_query(rng.uniform(size=n), oracle, k_results=want,
+                            batch=4)
+        rows.append((f"fig6/{ds}/random_order", "invocations",
+                     res_r.n_invocations))
+        bl = common.get_blazeit_scores(ds, "rare_event", quick, classify=True,
+                                       score_fn=score_fn,
+                                       budget=common.tmas_budget(wl))
+        res_b = limit_query(bl, oracle, k_results=want, batch=4)
+        rows.append((f"fig6/{ds}/blazeit", "invocations", res_b.n_invocations))
+        for variant in ("PT", "T"):
+            sv = common.get_tasti(ds, variant, quick)
+            proxy = sv.proxy_scores(score_fn, mode="top1")
+            res = limit_query(proxy, oracle, k_results=want, batch=4)
+            rows.append((f"fig6/{ds}/tasti_{variant.lower()}", "invocations",
+                         res.n_invocations))
+    return rows

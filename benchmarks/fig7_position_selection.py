@@ -1,0 +1,31 @@
+"""Fig. 7: SUPG selection of objects on the left-hand side — a query that
+violates the Lipschitz assumption; prior proxies were not designed for
+positions (paper §6.4)."""
+import numpy as np
+
+from benchmarks import common
+from repro.core.queries.selection import false_positive_rate, supg_recall_target
+
+
+def run(quick: bool = False):
+    rows = []
+    ds = "night-street"
+    wl = common.get_workload(ds, quick)
+    truth = common.truth_vector(wl, "score_left_side") > 0.5
+    oracle = lambda ids: truth[ids].astype(float)
+    budget = 300 if quick else 500
+    bl = common.get_blazeit_scores(ds, "score_left_side", quick, classify=True)
+    seeds = range(2 if quick else 4)
+
+    def mean_fpr(proxy):
+        return float(np.mean([false_positive_rate(
+            supg_recall_target(np.clip(proxy, 0, 1), oracle, budget=budget,
+                               seed=s).selected, truth) for s in seeds]))
+
+    rows.append(("fig7/blazeit", "fpr", round(mean_fpr(bl), 4)))
+    for variant in ("PT", "T"):
+        sv = common.get_tasti(ds, variant, quick)
+        proxy = sv.proxy_scores(wl.score_left_side)
+        rows.append((f"fig7/tasti_{variant.lower()}", "fpr",
+                     round(mean_fpr(proxy), 4)))
+    return rows

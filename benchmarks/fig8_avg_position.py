@@ -1,0 +1,32 @@
+"""Fig. 8: aggregation of the average x-position — pure regression, where
+per-query proxy training is brittle (the paper could not train BlazeIt to beat
+random sampling; we report the proxy anyway)."""
+import numpy as np
+
+from benchmarks import common
+from repro.core.queries.aggregation import aggregate_control_variates
+
+
+def run(quick: bool = False):
+    rows = []
+    ds = "night-street"
+    wl = common.get_workload(ds, quick)
+    truth = common.truth_vector(wl, "score_mean_x")
+    oracle = lambda ids: truth[ids]
+    seeds = range(2 if quick else 3)
+
+    def mean_inv(proxy, use_cv=True):
+        return float(np.mean([aggregate_control_variates(
+            proxy, oracle, err=0.01, seed=s, use_cv=use_cv).n_invocations
+            for s in seeds]))
+
+    rows.append(("fig8/random", "invocations",
+                 mean_inv(np.zeros(len(truth)), use_cv=False)))
+    bl = common.get_blazeit_scores(ds, "score_mean_x", quick)
+    rows.append(("fig8/blazeit_regression", "invocations", mean_inv(bl)))
+    for variant in ("PT", "T"):
+        sv = common.get_tasti(ds, variant, quick)
+        proxy = sv.proxy_scores(wl.score_mean_x)
+        rows.append((f"fig8/tasti_{variant.lower()}", "invocations",
+                     mean_inv(proxy)))
+    return rows

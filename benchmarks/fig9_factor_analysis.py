@@ -1,0 +1,43 @@
+"""Fig. 9: factor analysis — optimizations added in sequence (none -> +triplet
+-> +FPF mining -> +FPF clustering) on aggregation and limit queries."""
+import numpy as np
+
+from benchmarks import common
+from repro.core.pipeline import build_tasti
+from repro.core.queries.aggregation import aggregate_control_variates
+from repro.core.queries.limit import limit_query
+
+
+def _eval(sv, wl, truth_cnt, truth_rare, rare_fn):
+    agg = aggregate_control_variates(sv.proxy_scores(wl.score_count),
+                                     lambda i: truth_cnt[i], err=0.05,
+                                     seed=0).n_invocations
+    lim = limit_query(sv.proxy_scores(rare_fn, mode="top1"),
+                      lambda i: truth_rare[i], k_results=5, batch=4).n_invocations
+    return agg, lim
+
+
+def run(quick: bool = False):
+    rows = []
+    ds = "night-street"
+    wl = common.get_workload(ds, quick)
+    truth_cnt = common.truth_vector(wl, "score_count")
+    rare_fn = common.rare_event_fn(wl, ds)
+    truth_rare = np.asarray([rare_fn(r) for r in
+                             wl.target_dnn_batch(range(len(wl.features)))])
+    stages = [
+        ("none", dict(variant="PT", use_fpf_mining=False,
+                      use_fpf_clustering=False)),
+        ("+triplet", dict(variant="T", use_fpf_mining=False,
+                          use_fpf_clustering=False)),
+        ("+fpf_mining", dict(variant="T", use_fpf_mining=True,
+                             use_fpf_clustering=False)),
+        ("+fpf_clustering", dict(variant="T", use_fpf_mining=True,
+                                 use_fpf_clustering=True)),
+    ]
+    for name, kw in stages:
+        sv = build_tasti(wl, common.tasti_cfg(quick), **kw)
+        agg, lim = _eval(sv, wl, truth_cnt, truth_rare, rare_fn)
+        rows.append((f"fig9/{name}/agg", "invocations", agg))
+        rows.append((f"fig9/{name}/limit", "invocations", lim))
+    return rows

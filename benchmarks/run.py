@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.  Prints
+``name,metric,value`` CSV rows (metrics are the paper's hardware-independent
+ones: target-DNN invocations, FPR, % error, 100-F1, cost-model seconds).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig2_construction", "fig3_cost_vs_quality", "fig4_aggregation",
+    "fig5_supg", "fig6_limit", "fig7_position_selection", "fig8_avg_position",
+    "table1_no_guarantees", "table2_cracking", "fig9_factor_analysis",
+    "fig10_lesion", "fig11_buckets", "fig12_train_examples",
+    "fig13_embedding_size",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import common
+    failures = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run(quick=args.quick)
+            common.emit(rows)
+            print(f"# {mod_name} done in {time.time()-t0:.0f}s",
+                  file=sys.stderr)
+        except Exception as e:
+            failures.append(mod_name)
+            print(f"# {mod_name} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Table 1: queries without statistical guarantees.  Aggregation: % error of
+the direct proxy statistic.  Selection: 100 - F1 of thresholded proxy scores
+(threshold fit on a small validation sample, as prior systems do)."""
+import numpy as np
+
+from benchmarks import common
+
+
+def _f1(pred, truth):
+    tp = float((pred & truth).sum())
+    if tp == 0:
+        return 0.0
+    prec = tp / max(pred.sum(), 1)
+    rec = tp / max(truth.sum(), 1)
+    return 2 * prec * rec / (prec + rec)
+
+
+def run(quick: bool = False):
+    rows = []
+    ds = "night-street"
+    wl = common.get_workload(ds, quick)
+    truth_cnt = common.truth_vector(wl, "score_count")
+    sel_fn = common.sel_score_fn(wl, ds)
+    truth_sel = np.asarray([sel_fn(r) for r in
+                            wl.target_dnn_batch(range(len(wl.features)))]) > 0.5
+
+    systems = {
+        "tasti": common.get_tasti(ds, "T", quick).proxy_scores(wl.score_count),
+        "blazeit": common.get_blazeit_scores(ds, "score_count", quick),
+    }
+    for name, proxy in systems.items():
+        err = abs(float(proxy.mean()) - float(truth_cnt.mean())) /             max(float(truth_cnt.mean()), 1e-9) * 100
+        rows.append((f"table1/{ds}/agg_{name}", "pct_error", round(err, 2)))
+
+    sel_systems = {
+        "tasti": np.clip(common.get_tasti(ds, "T", quick)
+                         .proxy_scores(sel_fn), 0, 1),
+        "noscope": common.get_blazeit_scores(ds, "sel_rare", quick,
+                                             classify=True, score_fn=sel_fn),
+    }
+    rng = np.random.default_rng(0)
+    val = rng.choice(len(truth_sel), 200, replace=False)
+    for name, proxy in sel_systems.items():
+        best_t, best_f1 = 0.5, -1.0
+        for t in np.linspace(0.05, 0.95, 19):
+            f1 = _f1(proxy[val] > t, truth_sel[val])
+            if f1 > best_f1:
+                best_t, best_f1 = t, f1
+        f1 = _f1(proxy > best_t, truth_sel)
+        rows.append((f"table1/{ds}/sel_{name}", "100_minus_f1",
+                     round(100 * (1 - f1), 2)))
+    return rows

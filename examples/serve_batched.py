@@ -1,0 +1,20 @@
+"""Serving example: batched prefill + decode against the sequence-sharded KV
+cache (the decode path the dry-run's decode_32k/long_500k cells lower).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import subprocess
+import sys
+
+
+def main() -> None:
+    for arch in ("qwen3-1.7b", "xlstm-350m"):
+        cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+               "--preset", "ci", "--batch", "4", "--prompt-len", "24",
+               "--decode-steps", "12"]
+        print("+", " ".join(cmd))
+        subprocess.run(cmd, check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from the dry-run JSONs
+and the roofline analysis.
+
+    PYTHONPATH=src python experiments/make_reports.py
+"""
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, cell_is_runnable, get_config  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+
+DRY = REPO / "experiments" / "dryrun"
+
+
+def load(tag):
+    p = DRY / f"{tag}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | status | compile (s) | peak mem/dev (GiB) | HLO flops/dev | wire bytes/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                d = load(f"{arch}__{shape.name}__{mesh}")
+                if d is None:
+                    continue
+                if d["status"] == "skipped":
+                    lines.append(f"| {arch} | {shape.name} | {mesh} | "
+                                 f"skipped (full attn @500k) | — | — | — | — |")
+                    continue
+                peak = (d.get("peak_memory_bytes") or 0) / 2 ** 30
+                lines.append(
+                    f"| {arch} | {shape.name} | {mesh} | {d['status']} | "
+                    f"{d.get('compile_s', '—')} | {peak:.2f} | "
+                    f"{d.get('flops_per_device', 0):.2e} | "
+                    f"{d.get('wire_bytes_per_device', 0):.2e} |")
+    return "\n".join(lines)
+
+
+def roofline_md() -> str:
+    rows = roofline.full_table("single")
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | dominant | MODEL/HLO-useful | roofline % | peak GiB | HLO/analytic flops |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.3f} | {100*r['roofline_fraction']:.2f} | "
+            f"{r['peak_memory_gib']:.2f} | {r['hlo_vs_analytic_flops']:.3f} |")
+    return "\n".join(lines)
+
+
+def perf_compare(arch, shape_name, variant):
+    from repro.configs import SHAPE_BY_NAME
+    shape = SHAPE_BY_NAME[shape_name]
+    base = roofline.analyze_cell(arch, shape, "single")
+    var = roofline.analyze_cell(arch, shape, "single", variant=variant)
+    return base, var
+
+
+def main():
+    out = REPO / "experiments" / "generated_tables.md"
+    parts = ["## Generated: §Dry-run table\n", dryrun_table(),
+             "\n\n## Generated: §Roofline table (single-pod, baseline megatron)\n",
+             roofline_md(), "\n"]
+    out.write_text("\n".join(parts))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

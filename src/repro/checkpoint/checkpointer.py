@@ -1,0 +1,148 @@
+"""Checkpointing: async npz-shard save, manifest, reshard-on-restore.
+
+Design for 1000+ nodes (single-host implementation, multi-host layout):
+
+* Arrays are saved **sharding-agnostic** (full logical arrays gathered per
+  leaf; in a multi-host deployment each host writes only its owned shards and
+  the manifest records the global shape — the on-disk format already carries
+  per-leaf global shapes, so restore-time resharding works either way).
+* ``save_async`` snapshots to host memory synchronously (cheap) and writes to
+  disk on a background thread — the train loop never blocks on I/O.
+* Atomicity: write to ``step_XXXX.tmp`` then rename; the manifest is the
+  commit point.  Interrupted writes are invisible to ``latest_step``.
+* **Elastic restore**: ``restore`` takes the *current* shardings and puts each
+  leaf onto the (possibly different-sized) mesh — checkpoints written on a
+  512-chip run restore onto 256 chips or a single host unchanged.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import PyTree
+
+
+def _flatten_with_names(tree: PyTree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    return names, [v for _, v in flat], treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None) -> None:
+        names, leaves, _ = _flatten_with_names(tree)
+        host = [np.asarray(x) for x in leaves]  # device -> host snapshot
+        self._write(step, names, host, extra or {})
+
+    def save_async(self, step: int, tree: PyTree,
+                   extra: Optional[Dict] = None) -> None:
+        self.wait()
+        names, leaves, _ = _flatten_with_names(tree)
+        host = [np.asarray(x) for x in leaves]  # snapshot before returning
+
+        def work():
+            self._write(step, names, host, extra or {})
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, names, host, extra: Dict) -> None:
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        # numpy's npz can't round-trip ml_dtypes (bf16 etc.): store those as
+        # float32 on disk; the manifest records the logical dtype and restore
+        # casts back to the target leaf dtype.
+        def native(a: np.ndarray) -> np.ndarray:
+            if a.dtype == object:
+                raise TypeError(
+                    "checkpoint leaves must be numeric arrays; carry run "
+                    "metadata via the `extra` dict instead")
+            try:
+                np.dtype(a.dtype.name)
+                if a.dtype.kind in "fiub":
+                    return a
+            except TypeError:
+                pass
+            return a.astype(np.float32)
+
+        arrays = {f"a{i}": native(a) for i, a in enumerate(host)}
+        np.savez(tmp / "arrays.npz", **arrays)
+        manifest = {
+            "step": step,
+            "names": names,
+            "shapes": [list(a.shape) for a in host],
+            "dtypes": [str(a.dtype) for a in host],
+            "extra": extra,
+            "time": time.time(),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m and (p / "manifest.json").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: PyTree,
+                shardings: Optional[PyTree] = None):
+        """Restore into the structure of ``target`` (tree of arrays or
+        ShapeDtypeStructs), placing leaves with ``shardings`` if given —
+        this is the elastic-resharding path."""
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "arrays.npz")
+        names, leaves, treedef = _flatten_with_names(target)
+        assert names == manifest["names"], "checkpoint/target tree mismatch"
+        shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                        else [None] * len(leaves))
+        out = []
+        for i, (tgt, sh) in enumerate(zip(leaves, shard_leaves)):
+            arr = data[f"a{i}"]
+            want = jnp.dtype(tgt.dtype)
+            a = arr.astype(want) if arr.dtype != want else arr
+            if sh is not None:
+                out.append(jax.device_put(a, sh))
+            else:
+                out.append(jnp.asarray(a))
+        return jax.tree.unflatten(treedef, out), manifest["extra"]

@@ -1,0 +1,134 @@
+"""Baselines the paper compares against (§6.1):
+
+* ``train_query_proxy``: BlazeIt/NoScope-style *per-query* proxy model — a
+  small MLP trained on ``budget`` target-DNN-annotated records with an ad-hoc
+  per-query loss (regression for counts, logistic for predicates).  This is
+  the "TMAS + tiny ResNet" pipeline; its cost model charges the same
+  target-DNN invocations the paper charges BlazeIt.
+* random sampling (aggregation): ``aggregate_control_variates(use_cv=False)``.
+* TASTI-PT: the pre-trained-embedder variant — an embedder trained with a
+  generic self-supervised objective (feature reconstruction), *not* the
+  induced-schema triplet loss.  Built here so both TASTI variants share code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedder import EmbedderConfig, embed, embedder_specs, init_embedder
+from repro.models.common import ParamSpec, PyTree, init_params
+from repro.optim.adamw import OptimizerConfig, adamw_update, init_opt_state
+
+
+# ---------------------------------------------------------------------------
+# Per-query proxy model (BlazeIt-style)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ProxyConfig:
+    feature_dim: int = 64
+    hidden: int = 32  # speed-class parity with the paper's tiny per-query proxies
+    steps: int = 300
+    lr: float = 3e-3
+    batch: int = 128
+    classify: bool = False
+    seed: int = 0
+
+
+def _proxy_specs(cfg: ProxyConfig) -> PyTree:
+    return {
+        "w0": ParamSpec((cfg.feature_dim, cfg.hidden), ("embed", "mlp"), jnp.float32),
+        "b0": ParamSpec((cfg.hidden,), (None,), jnp.float32, init="zeros"),
+        "w1": ParamSpec((cfg.hidden, cfg.hidden), ("embed", "mlp"), jnp.float32),
+        "b1": ParamSpec((cfg.hidden,), (None,), jnp.float32, init="zeros"),
+        "w2": ParamSpec((cfg.hidden, 1), ("embed", "mlp"), jnp.float32),
+        "b2": ParamSpec((1,), (None,), jnp.float32, init="zeros"),
+    }
+
+
+def _proxy_fwd(p: PyTree, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.dot(x, p["w0"]) + p["b0"])
+    h = jax.nn.gelu(jnp.dot(h, p["w1"]) + p["b1"])
+    return (jnp.dot(h, p["w2"]) + p["b2"])[..., 0]
+
+
+def train_query_proxy(features: np.ndarray, train_ids: np.ndarray,
+                      train_targets: np.ndarray,
+                      cfg: Optional[ProxyConfig] = None) -> np.ndarray:
+    """Train the per-query proxy on annotated ids; return proxy scores (N,)."""
+    cfg = cfg or ProxyConfig(feature_dim=features.shape[1])
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params(_proxy_specs(cfg), key)
+    opt = OptimizerConfig(peak_lr=cfg.lr, min_lr=cfg.lr * 0.1, warmup_steps=10,
+                          total_steps=cfg.steps, weight_decay=1e-4)
+    state = init_opt_state(params, opt)
+    x_all = jnp.asarray(features[train_ids])
+    y_all = jnp.asarray(train_targets.astype(np.float32))
+
+    def loss_fn(p, x, y):
+        out = _proxy_fwd(p, x)
+        if cfg.classify:
+            return jnp.mean(jnp.maximum(out, 0) - out * y
+                            + jnp.log1p(jnp.exp(-jnp.abs(out))))
+        return jnp.mean((out - y) ** 2)
+
+    @jax.jit
+    def step(p, s, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, s, _ = adamw_update(p, g, s, opt)
+        return p, s, loss
+
+    rng = np.random.default_rng(cfg.seed)
+    for _ in range(cfg.steps):
+        sel = rng.integers(0, len(train_ids), size=min(cfg.batch, len(train_ids)))
+        params, state, _ = step(params, state, x_all[sel], y_all[sel])
+
+    scores = np.asarray(jax.jit(lambda p, x: _proxy_fwd(p, x))(
+        params, jnp.asarray(features)))
+    if cfg.classify:
+        scores = 1.0 / (1.0 + np.exp(-scores))
+    return scores
+
+
+# ---------------------------------------------------------------------------
+# "Pre-trained" embedder (TASTI-PT)
+# ---------------------------------------------------------------------------
+
+def pretrain_embedder(features: np.ndarray, ecfg: EmbedderConfig,
+                      steps: int = 300, lr: float = 1e-3,
+                      seed: int = 0) -> PyTree:
+    """Generic self-supervised pre-training: embed -> linear decode ->
+    reconstruct features.  Captures feature geometry without any access to the
+    induced schema — the paper's ImageNet/BERT stand-in."""
+    key = jax.random.PRNGKey(seed)
+    params = init_embedder(ecfg, key)
+    dec = init_params({"wd": ParamSpec((ecfg.embed_dim, ecfg.feature_dim),
+                                       ("embed", "mlp"), jnp.float32)},
+                      jax.random.PRNGKey(seed + 1))
+    both = {"enc": params, "dec": dec}
+    opt = OptimizerConfig(peak_lr=lr, min_lr=lr * 0.1, warmup_steps=10,
+                          total_steps=steps, weight_decay=0.0)
+    state = init_opt_state(both, opt)
+    feats = jnp.asarray(features)
+
+    def loss_fn(p, x):
+        e = embed(p["enc"], x, ecfg)
+        rec = jnp.dot(e, p["dec"]["wd"])
+        return jnp.mean((rec - x) ** 2)
+
+    @jax.jit
+    def step(p, s, x):
+        loss, g = jax.value_and_grad(loss_fn)(p, x)
+        p, s, _ = adamw_update(p, g, s, opt)
+        return p, s, loss
+
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        sel = rng.integers(0, len(features), size=256)
+        both, state, _ = step(both, state, feats[sel])
+    return both["enc"]

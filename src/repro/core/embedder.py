@@ -1,0 +1,98 @@
+"""Embedding DNN: record features -> semantic embeddings.
+
+Two backbones:
+* ``mlp`` (default for the paper-scale reproduction; stands in for the
+  ResNet-18 / BERT embedders — the paper's point is that the embedder is
+  orders of magnitude cheaper than the target DNN, not its architecture), and
+* any registered transformer config (``backbone="tasti-embedder"`` or one of
+  the 10 assigned archs) for the TPU-scale path: features are projected to
+  d_model, run through the backbone blocks bidirectionally, mean-pooled, and
+  projected to the embedding size (128, paper default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamSpec, PyTree, init_params
+
+
+@dataclass(frozen=True)
+class EmbedderConfig:
+    feature_dim: int = 64
+    embed_dim: int = 128          # paper default embedding size
+    hidden: int = 256
+    n_layers: int = 3
+    backbone: str = "mlp"         # "mlp" | config name from repro.configs
+    seq_tokens: int = 8           # transformer path: reshape features to tokens
+    normalize: bool = False
+
+
+def embedder_specs(cfg: EmbedderConfig) -> PyTree:
+    if cfg.backbone == "mlp":
+        dims = [cfg.feature_dim] + [cfg.hidden] * (cfg.n_layers - 1) + [cfg.embed_dim]
+        return {f"w{i}": ParamSpec((dims[i], dims[i + 1]), ("embed", "mlp"),
+                                   jnp.float32)
+                for i in range(len(dims) - 1)} | {
+            f"b{i}": ParamSpec((dims[i + 1],), (None,), jnp.float32, init="zeros")
+            for i in range(len(dims) - 1)}
+    from repro.configs import get_config
+    from repro.models import blocks as blocks_lib
+    from repro.models.common import stack_specs
+    bb = get_config(cfg.backbone)
+    assert cfg.feature_dim % cfg.seq_tokens == 0
+    tok_dim = cfg.feature_dim // cfg.seq_tokens
+    return {
+        "proj_in": ParamSpec((tok_dim, bb.d_model), ("embed", "mlp"), jnp.float32),
+        "blocks": tuple(stack_specs(t, bb.n_repeats)
+                        for t in blocks_lib.block_specs(bb)),
+        "proj_out": ParamSpec((bb.d_model, cfg.embed_dim), ("embed", "mlp"),
+                              jnp.float32),
+    }
+
+
+def init_embedder(cfg: EmbedderConfig, key: jax.Array) -> PyTree:
+    return init_params(embedder_specs(cfg), key)
+
+
+def embed(params: PyTree, x: jax.Array, cfg: EmbedderConfig) -> jax.Array:
+    """x (N, feature_dim) -> (N, embed_dim)."""
+    if cfg.backbone == "mlp":
+        h = x
+        n = sum(1 for k in params if k.startswith("w"))
+        for i in range(n):
+            h = jnp.dot(h, params[f"w{i}"]) + params[f"b{i}"]
+            if i < n - 1:
+                h = jax.nn.gelu(h)
+    else:
+        from repro.configs import get_config
+        from repro.models import blocks as blocks_lib
+        bb = get_config(cfg.backbone)
+        tok = x.reshape(x.shape[0], cfg.seq_tokens, -1)
+        h = jnp.dot(tok, params["proj_in"])
+
+        def body(carry, bp):
+            out, _ = blocks_lib.block_fwd(bp, carry, bb, angles=None,
+                                          causal=False)
+            return out, ()
+
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        h = jnp.dot(jnp.mean(h, axis=1), params["proj_out"])
+    if cfg.normalize:
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return h
+
+
+def embed_all(params: PyTree, features: np.ndarray, cfg: EmbedderConfig,
+              batch: int = 4096) -> np.ndarray:
+    """Batched host loop (the N*c_E term of the paper's cost model)."""
+    fn = jax.jit(lambda p, x: embed(p, x, cfg))
+    outs = []
+    for i in range(0, len(features), batch):
+        outs.append(np.asarray(fn(params, jnp.asarray(features[i:i + batch]))))
+    return np.concatenate(outs, axis=0)

@@ -1,0 +1,58 @@
+"""Furthest-point-first (Gonzalez 1985): training-data mining and cluster-
+representative selection (paper §3.1/§3.2).
+
+FPF gives a 2-approximation to the optimal max intra-cluster distance — the
+quantity the paper's Theorems 1/2 depend on.  Each step is one fused pass via
+``repro.kernels.fpf_update`` (distance to newest rep + running min + argmax);
+a small random fraction is mixed in for average-case queries (§3.2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fpf_update.ops import fpf_update
+
+
+def fpf_select(embeddings: np.ndarray, n_select: int,
+               random_fraction: float = 0.1, seed: int = 0,
+               impl: str = "auto", start: Optional[int] = None
+               ) -> np.ndarray:
+    """Returns indices (n_select,) — FPF points + a random mix."""
+    n = len(embeddings)
+    n_select = min(n_select, n)
+    rng = np.random.default_rng(seed)
+    n_rand = int(round(n_select * random_fraction))
+    n_fpf = n_select - n_rand
+
+    x = jnp.asarray(embeddings, jnp.float32)
+    chosen = np.empty(n_fpf, np.int64)
+    chosen[0] = start if start is not None else int(rng.integers(n))
+    min_d2 = jnp.full((n,), np.float32(np.inf))
+    idx = chosen[0]
+    for t in range(1, n_fpf):
+        min_d2, nxt, _ = fpf_update(x, x[idx], min_d2, impl=impl)
+        idx = int(nxt)
+        chosen[t] = idx
+    # mix random clusters (dedup while keeping count)
+    selected = set(chosen.tolist())
+    pool = np.setdiff1d(np.arange(n), chosen, assume_unique=False)
+    if n_rand and len(pool):
+        extra = rng.choice(pool, size=min(n_rand, len(pool)), replace=False)
+        out = np.concatenate([chosen, extra])
+    else:
+        out = chosen
+    return out.astype(np.int64)
+
+
+def max_intra_cluster_dist(embeddings: np.ndarray,
+                           reps: np.ndarray) -> float:
+    """max_x ||phi(x) - phi(c(x))|| — the density quantity in Thm 1/2."""
+    x = jnp.asarray(embeddings, jnp.float32)
+    r = jnp.asarray(embeddings[reps], jnp.float32)
+    from repro.kernels.distance_topk.ops import distance_topk
+    d2, _ = distance_topk(x, r, 1)
+    return float(jnp.sqrt(jnp.max(d2)))

@@ -1,0 +1,147 @@
+"""The TASTI index (paper §3): embeddings + annotated cluster representatives
++ cached top-k distances, with cracking (§3.3) and a construction cost model
+(§3.4: O(C*c_T + L*c_E + N*c_E + N*C*D*c_D)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schema as schema_lib
+from repro.core.fpf import fpf_select, max_intra_cluster_dist
+from repro.kernels.distance_topk.ops import distance_topk
+
+
+@dataclass
+class IndexCost:
+    target_invocations: int = 0
+    embed_records: int = 0
+    training_steps: int = 0
+    distance_pairs: int = 0
+
+    def wall_clock_s(self) -> float:
+        return (self.target_invocations * schema_lib.TARGET_DNN_COST_S
+                + self.embed_records * schema_lib.EMBED_DNN_COST_S
+                + self.training_steps * 256 * schema_lib.EMBED_DNN_COST_S * 3
+                + self.distance_pairs * schema_lib.DIST_COST_S)
+
+    def breakdown(self) -> Dict[str, float]:
+        return {
+            "target_dnn_s": self.target_invocations * schema_lib.TARGET_DNN_COST_S,
+            "embedding_s": self.embed_records * schema_lib.EMBED_DNN_COST_S,
+            "training_s": self.training_steps * 256 * schema_lib.EMBED_DNN_COST_S * 3,
+            "distance_s": self.distance_pairs * schema_lib.DIST_COST_S,
+        }
+
+
+@dataclass
+class TastiIndex:
+    embeddings: np.ndarray            # (N, d)
+    rep_ids: np.ndarray               # (C,) record indices of representatives
+    annotations: list                 # len C target-DNN outputs for reps
+    topk_d2: np.ndarray               # (N, k) squared distances (ascending)
+    topk_ids: np.ndarray              # (N, k) indices INTO rep_ids
+    k: int
+    cost: IndexCost = field(default_factory=IndexCost)
+
+    @property
+    def n_records(self) -> int:
+        return len(self.embeddings)
+
+    @property
+    def n_reps(self) -> int:
+        return len(self.rep_ids)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(embeddings: np.ndarray, n_reps: int, annotate: Callable,
+              k: int = 8, random_fraction: float = 0.1, seed: int = 0,
+              cost: Optional[IndexCost] = None,
+              rep_selection: str = "fpf") -> "TastiIndex":
+        """annotate(ids) -> list of target-DNN outputs (counted in the cost)."""
+        n = len(embeddings)
+        cost = cost or IndexCost()
+        if rep_selection == "fpf":
+            rep_ids = fpf_select(embeddings, n_reps,
+                                 random_fraction=random_fraction, seed=seed)
+        else:
+            rng = np.random.default_rng(seed)
+            rep_ids = rng.choice(n, size=min(n_reps, n), replace=False)
+        annotations = annotate(rep_ids)
+        cost.target_invocations += len(rep_ids)
+        d2, ids = distance_topk(jnp.asarray(embeddings),
+                                jnp.asarray(embeddings[rep_ids]),
+                                min(k, len(rep_ids)))
+        cost.distance_pairs += n * len(rep_ids)
+        return TastiIndex(embeddings=embeddings,
+                          rep_ids=np.asarray(rep_ids),
+                          annotations=list(annotations),
+                          topk_d2=np.asarray(d2), topk_ids=np.asarray(ids),
+                          k=k, cost=cost)
+
+    # ------------------------------------------------------------------
+    def crack(self, new_ids: Sequence[int], new_annotations: list) -> None:
+        """Fold query-time target-DNN results back in as new representatives
+        (paper §3.3).  Incremental: distances only to the new reps, merged
+        with the cached top-k (no full rebuild)."""
+        new_ids = np.asarray([i for i in new_ids], np.int64)
+        if len(new_ids) == 0:
+            return
+        # dedupe against existing reps
+        existing = set(self.rep_ids.tolist())
+        keep = [t for t, i in enumerate(new_ids) if int(i) not in existing]
+        if not keep:
+            return
+        new_ids = new_ids[keep]
+        new_annotations = [new_annotations[t] for t in keep]
+        base_c = self.n_reps
+        d2_new, loc = distance_topk(jnp.asarray(self.embeddings),
+                                    jnp.asarray(self.embeddings[new_ids]),
+                                    min(self.k, len(new_ids)))
+        self.cost.distance_pairs += self.n_records * len(new_ids)
+        d2_new = np.asarray(d2_new)
+        glob = base_c + np.asarray(loc)
+        # merge (N, k_old + k_new) and keep k smallest
+        cand_d = np.concatenate([self.topk_d2, d2_new], axis=1)
+        cand_i = np.concatenate([self.topk_ids, glob], axis=1)
+        order = np.argsort(cand_d, axis=1)[:, :self.k]
+        self.topk_d2 = np.take_along_axis(cand_d, order, axis=1)
+        self.topk_ids = np.take_along_axis(cand_i, order, axis=1)
+        self.rep_ids = np.concatenate([self.rep_ids, new_ids])
+        self.annotations = self.annotations + list(new_annotations)
+
+    # ------------------------------------------------------------------
+    def rep_scores(self, score_fn: Callable[[Any], float]) -> np.ndarray:
+        return np.asarray([score_fn(a) for a in self.annotations], np.float64)
+
+    def max_intra_cluster(self) -> float:
+        return float(np.sqrt(np.max(self.topk_d2[:, 0])))
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        import pickle
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        np.savez(p.with_suffix(".npz"), embeddings=self.embeddings,
+                 rep_ids=self.rep_ids, topk_d2=self.topk_d2,
+                 topk_ids=self.topk_ids, k=np.int64(self.k))
+        with open(p.with_suffix(".ann.pkl"), "wb") as f:
+            pickle.dump({"annotations": self.annotations,
+                         "cost": dataclasses.asdict(self.cost)}, f)
+
+    @staticmethod
+    def load(path: str) -> "TastiIndex":
+        import pickle
+        p = pathlib.Path(path)
+        z = np.load(p.with_suffix(".npz"))
+        with open(p.with_suffix(".ann.pkl"), "rb") as f:
+            meta = pickle.load(f)
+        return TastiIndex(embeddings=z["embeddings"], rep_ids=z["rep_ids"],
+                          annotations=meta["annotations"],
+                          topk_d2=z["topk_d2"], topk_ids=z["topk_ids"],
+                          k=int(z["k"]), cost=IndexCost(**meta["cost"]))

@@ -1,0 +1,132 @@
+"""End-to-end TASTI pipelines over a workload (the prototype system of §6).
+
+``build_tasti(workload, variant=...)``:
+  1. FPF-mine a training set over pre-trained embeddings (budget target-DNN
+     annotations),
+  2. train the embedding DNN with the induced-schema triplet loss (TASTI-T) or
+     keep the pre-trained embedder (TASTI-PT),
+  3. embed all records, FPF-select cluster representatives (+random mix),
+     annotate them, cache top-k distances.
+
+Returned ``TastiSystem`` exposes the paper's query API: proxy scores per
+query-specific ``Score`` function, with propagation mode per score type.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core import propagation, schema as schema_lib
+from repro.core.baselines import pretrain_embedder
+from repro.core.embedder import EmbedderConfig, embed_all, init_embedder
+from repro.core.fpf import fpf_select
+from repro.core.index import IndexCost, TastiIndex
+from repro.core.triplet import TripletConfig, mine_triplets, train_embedder
+
+
+@dataclass
+class TastiConfig:
+    n_train: int = 3000            # paper: 3,000 training records (video)
+    n_reps: int = 7000             # paper: 7,000 cluster representatives
+    k: int = 8
+    embed_dim: int = 128           # paper default
+    random_fraction: float = 0.1
+    triplet: TripletConfig = field(default_factory=TripletConfig)
+    pretrain_steps: int = 200
+    seed: int = 0
+
+
+@dataclass
+class TastiSystem:
+    index: TastiIndex
+    workload: Any
+    embed_params: Any
+    ecfg: EmbedderConfig
+    variant: str
+
+    # -- paper §4: query-specific proxy scores ---------------------------
+    def proxy_scores(self, score_fn: Callable[[Any], float],
+                     mode: str = "numeric") -> np.ndarray:
+        rep_scores = self.index.rep_scores(score_fn)
+        if mode == "numeric":
+            return propagation.propagate_numeric(
+                rep_scores, self.index.topk_ids, self.index.topk_d2)
+        if mode == "top1":
+            return propagation.propagate_top1(
+                rep_scores, self.index.topk_ids, self.index.topk_d2)
+        raise ValueError(mode)
+
+    def oracle(self, score_fn: Callable[[Any], float],
+               counter: Optional[list] = None) -> Callable:
+        wl = self.workload
+
+        def call(ids: np.ndarray) -> np.ndarray:
+            if counter is not None:
+                counter.append(len(ids))
+            return np.asarray([score_fn(s) for s in wl.target_dnn_batch(ids)])
+
+        return call
+
+    def crack_with(self, ids: np.ndarray) -> None:
+        anns = self.workload.target_dnn_batch(np.asarray(ids, np.int64))
+        self.index.crack(np.asarray(ids, np.int64), anns)
+
+
+def build_tasti(workload, cfg: Optional[TastiConfig] = None,
+                variant: str = "T",
+                use_fpf_mining: bool = True,
+                use_fpf_clustering: bool = True,
+                embed_params=None) -> TastiSystem:
+    """variant: "T" (triplet-trained) | "PT" (pre-trained only)."""
+    cfg = cfg or TastiConfig()
+    cost = IndexCost()
+    feats = workload.features
+    ecfg = EmbedderConfig(feature_dim=feats.shape[1], embed_dim=cfg.embed_dim)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    # 1) pre-trained embeddings (generic self-supervision; no schema access)
+    if embed_params is None:
+        pt_params = pretrain_embedder(feats, ecfg, steps=cfg.pretrain_steps,
+                                      seed=cfg.seed)
+    else:
+        pt_params = embed_params
+    cost.embed_records += len(feats)
+    pt_embeddings = embed_all(pt_params, feats, ecfg)
+
+    params = pt_params
+    if variant == "T":
+        # 2) FPF-mine the training set, annotate with the target DNN
+        if use_fpf_mining:
+            train_ids = fpf_select(pt_embeddings, cfg.n_train,
+                                   random_fraction=cfg.random_fraction,
+                                   seed=cfg.seed)
+        else:
+            rng = np.random.default_rng(cfg.seed)
+            train_ids = rng.choice(len(feats), size=min(cfg.n_train, len(feats)),
+                                   replace=False)
+        cost.target_invocations += len(train_ids)  # annotations for closeness
+        rng = np.random.default_rng(cfg.seed + 1)
+        triples = mine_triplets(train_ids, workload.is_close, rng,
+                                max_triplets=cfg.triplet.max_triplets)
+        train_feats = feats[train_ids]
+        params, _ = train_embedder(params, train_feats, triples, ecfg,
+                                   cfg.triplet)
+        cost.training_steps += cfg.triplet.steps
+
+    # 3) embed all records with the (possibly trained) embedder
+    embeddings = embed_all(params, feats, ecfg)
+    cost.embed_records += len(feats)
+
+    def annotate(ids):
+        return workload.target_dnn_batch(np.asarray(ids, np.int64))
+
+    index = TastiIndex.build(
+        embeddings, cfg.n_reps, annotate, k=cfg.k,
+        random_fraction=cfg.random_fraction, seed=cfg.seed, cost=cost,
+        rep_selection="fpf" if use_fpf_clustering else "random")
+    return TastiSystem(index=index, workload=workload, embed_params=params,
+                       ecfg=ecfg, variant=variant)

@@ -1,0 +1,44 @@
+"""Score propagation (paper §4.2): representative scores -> all records.
+
+Numeric scores: distance-weighted mean of the k nearest representatives.
+Categorical: distance-weighted majority vote.  Distances are cached in the
+index, so propagation is O(N*k) arithmetic — the paper's key query-time win.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def propagate_numeric(rep_scores: np.ndarray, topk_ids: np.ndarray,
+                      topk_d2: np.ndarray, eps: float = 1e-6) -> np.ndarray:
+    """rep_scores (C,), topk_ids/(d2) (N,k) -> (N,) weighted-mean scores."""
+    w = 1.0 / (np.sqrt(np.maximum(topk_d2, 0.0)) + eps)  # (N,k)
+    s = rep_scores[topk_ids]                              # (N,k)
+    return (w * s).sum(1) / w.sum(1)
+
+
+def propagate_categorical(rep_scores: np.ndarray, topk_ids: np.ndarray,
+                          topk_d2: np.ndarray, n_classes: int,
+                          eps: float = 1e-6) -> np.ndarray:
+    """Distance-weighted vote -> (N,) class ids."""
+    w = 1.0 / (np.sqrt(np.maximum(topk_d2, 0.0)) + eps)
+    cls = rep_scores[topk_ids].astype(np.int64)           # (N,k)
+    n = len(topk_ids)
+    votes = np.zeros((n, n_classes))
+    for j in range(topk_ids.shape[1]):
+        np.add.at(votes, (np.arange(n), cls[:, j]), w[:, j])
+    return votes.argmax(1)
+
+
+def propagate_top1(rep_scores: np.ndarray, topk_ids: np.ndarray,
+                   topk_d2: np.ndarray) -> np.ndarray:
+    """k=1 propagation with distance tie-break ordering — the paper's limit-
+    query scoring (§6.3): score of the nearest rep, ranked by (score, -dist)."""
+    base = rep_scores[topk_ids[:, 0]]
+    d = np.sqrt(np.maximum(topk_d2[:, 0], 0.0))
+    # strictly monotone in score; distance only breaks ties within a score
+    return base - 1e-6 * d / (1.0 + d.max())

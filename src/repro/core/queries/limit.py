@@ -1,0 +1,40 @@
+"""Limit queries (paper §4.3): find K records matching a rare predicate by
+walking records in descending proxy-score order, invoking the target DNN on
+each until K matches are found.  Metric: target-DNN invocations (fig. 6).
+TASTI recommends k=1 propagation with distance tie-breaks for these (§6.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Tuple
+
+import numpy as np
+
+
+@dataclass
+class LimitResult:
+    found_ids: np.ndarray
+    n_invocations: int
+    examined_ids: np.ndarray
+
+
+def limit_query(proxy: np.ndarray,
+                oracle: Callable[[np.ndarray], np.ndarray],
+                k_results: int, batch: int = 16,
+                max_invocations: int = 0) -> LimitResult:
+    n = len(proxy)
+    order = np.argsort(-proxy, kind="stable")
+    max_inv = max_invocations or n
+    found: list = []
+    examined = 0
+    for start in range(0, n, batch):
+        ids = order[start:start + batch]
+        labels = oracle(ids)
+        examined += len(ids)
+        found.extend(int(i) for i, l in zip(ids, labels) if l > 0.5)
+        if len(found) >= k_results or examined >= max_inv:
+            break
+    return LimitResult(found_ids=np.asarray(found[:k_results], np.int64),
+                       n_invocations=examined,
+                       examined_ids=order[:examined])

@@ -1,0 +1,128 @@
+"""Triplet-loss training of the embedding DNN (paper §3.1).
+
+* ``mine_triplets``: builds (anchor, positive, negative) index triples from
+  target-DNN annotations of the FPF-mined training set, using the workload's
+  ``IsClose`` heuristic — "close" under the induced schema.
+* ``triplet_loss``: the paper's margin hinge on ||phi(a)-phi(p)|| vs
+  ||phi(a)-phi(n)||.
+* ``train_embedder``: AdamW on mini-batches of triples; in-batch semi-hard
+  selection optional.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedder import EmbedderConfig, embed
+from repro.models.common import PyTree
+from repro.optim.adamw import OptimizerConfig, adamw_update, init_opt_state
+
+
+@dataclass(frozen=True)
+class TripletConfig:
+    margin: float = 1.0
+    batch: int = 256
+    steps: int = 400
+    lr: float = 1e-3
+    max_triplets: int = 200_000
+    seed: int = 0
+
+
+def triplet_loss(emb_a: jax.Array, emb_p: jax.Array, emb_n: jax.Array,
+                 margin: float) -> jax.Array:
+    d_ap = jnp.linalg.norm(emb_a - emb_p, axis=-1)
+    d_an = jnp.linalg.norm(emb_a - emb_n, axis=-1)
+    return jnp.mean(jnp.maximum(0.0, margin + d_ap - d_an))
+
+
+def mine_triplets(train_ids: np.ndarray, is_close: Callable[[int, int], bool],
+                  rng: np.random.Generator,
+                  max_triplets: int = 200_000) -> np.ndarray:
+    """Exhaustive close/far split over the annotated set -> (T, 3) indices."""
+    n = len(train_ids)
+    close_sets = [[] for _ in range(n)]
+    far_sets = [[] for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1, n):
+            if is_close(int(train_ids[i]), int(train_ids[j])):
+                close_sets[i].append(j)
+                close_sets[j].append(i)
+            else:
+                far_sets[i].append(j)
+                far_sets[j].append(i)
+    triples = []
+    for i in range(n):
+        if not close_sets[i] or not far_sets[i]:
+            continue
+        k = min(len(close_sets[i]), 32)
+        pos = rng.choice(close_sets[i], size=k, replace=False)
+        neg = rng.choice(far_sets[i], size=k, replace=True)
+        for p, ng in zip(pos, neg):
+            triples.append((i, int(p), int(ng)))
+    rng.shuffle(triples)
+    out = np.asarray(triples[:max_triplets], np.int32)
+    if len(out) == 0:
+        out = np.zeros((0, 3), np.int32)
+    return out
+
+
+def train_embedder(params: PyTree, features: np.ndarray, triples: np.ndarray,
+                   ecfg: EmbedderConfig, tcfg: TripletConfig) -> Tuple[PyTree, list]:
+    """Returns (trained params, loss history).  ``features`` are the training
+    records' raw features (indexed by the triples)."""
+    if len(triples) == 0:
+        return params, []
+    opt = OptimizerConfig(peak_lr=tcfg.lr, min_lr=tcfg.lr * 0.1,
+                          warmup_steps=20, total_steps=tcfg.steps,
+                          weight_decay=0.0, clip_norm=1.0)
+    state = init_opt_state(params, opt)
+    feats = jnp.asarray(features)
+
+    def loss_fn(p, idx):
+        f = feats[idx.reshape(-1)]
+        e = embed(p, f, ecfg).reshape(-1, 3, ecfg.embed_dim)
+        return triplet_loss(e[:, 0], e[:, 1], e[:, 2], tcfg.margin)
+
+    @jax.jit
+    def step(p, s, idx):
+        loss, grads = jax.value_and_grad(loss_fn)(p, idx)
+        p, s, _ = adamw_update(p, grads, s, opt)
+        return p, s, loss
+
+    rng = np.random.default_rng(tcfg.seed)
+    history = []
+    for it in range(tcfg.steps):
+        sel = rng.integers(0, len(triples), size=min(tcfg.batch, len(triples)))
+        p_new, state, loss = step(params, state, jnp.asarray(triples[sel]))
+        params = p_new
+        history.append(float(loss))
+    return params, history
+
+
+def population_triplet_loss(embeddings: np.ndarray, dist_fn, ids: np.ndarray,
+                            m_radius: float, margin: float,
+                            n_samples: int = 2000, seed: int = 0) -> float:
+    """Monte-Carlo estimate of L(phi; M, m) (Eq. 1) over annotated ids —
+    used by the theory validators and EXPERIMENTS.md."""
+    rng = np.random.default_rng(seed)
+    n = len(ids)
+    total, used = 0.0, 0
+    for _ in range(n_samples):
+        a = int(rng.integers(n))
+        d_all = np.array([dist_fn(int(ids[a]), int(ids[j])) for j in range(n)])
+        close = np.where((d_all < m_radius) & (np.arange(n) != a))[0]
+        far = np.where(d_all >= m_radius)[0]
+        if len(close) == 0 or len(far) == 0:
+            continue
+        p = int(rng.choice(close))
+        ng = int(rng.choice(far))
+        d_ap = np.linalg.norm(embeddings[a] - embeddings[p])
+        d_an = np.linalg.norm(embeddings[a] - embeddings[ng])
+        total += max(0.0, margin + d_ap - d_an)
+        used += 1
+    return total / max(used, 1)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: blocked pairwise squared-L2 distances with a *running
+top-k* — the bandwidth-optimal form of the paper's N x C distance computation
+(DESIGN.md §3).
+
+Instead of materializing the (N, C) distance matrix in HBM (the paper's
+``NCD * c_D`` term as implemented on GPU), each (row-block i, col-block j)
+grid step computes a (BN, BC) tile on the MXU (2 x BN x BC x D FLOPs via one
+``dot``) and folds it into a per-row top-k held in VMEM across the j sweep —
+O(N*k) HBM writes instead of O(N*C).
+
+Top-k maintenance is sort-free (TPU-friendly): k rounds of (min, argmin,
+mask) extract the k smallest of the fresh tile, which are then merged with
+the running top-k through another k rounds over the concatenated 2k
+candidates.  All ops are VPU-native (max/where/iota); no lax.sort / top_k
+inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_BIG = 3.0e38  # python scalar: jnp constants can't be captured by kernels
+
+
+def _k_smallest(vals: jax.Array, ids: jax.Array, k: int):
+    """vals/ids (BN, M) -> k smallest per row, via k extraction rounds."""
+    bn = vals.shape[0]
+    out_v = jnp.zeros((bn, k), jnp.float32)
+    out_i = jnp.zeros((bn, k), jnp.int32)
+
+    def body(t, carry):
+        vals_c, out_v, out_i = carry
+        m = jnp.min(vals_c, axis=1)
+        am = jnp.argmin(vals_c, axis=1)
+        sel = jnp.take_along_axis(ids, am[:, None], axis=1)[:, 0]
+        out_v = out_v.at[:, t].set(m)
+        out_i = out_i.at[:, t].set(sel)
+        onehot = jax.lax.broadcasted_iota(jnp.int32, vals_c.shape, 1) == am[:, None]
+        vals_c = jnp.where(onehot, NEG_BIG, vals_c)
+        return vals_c, out_v, out_i
+
+    _, out_v, out_i = jax.lax.fori_loop(0, k, body, (vals, out_v, out_i))
+    return out_v, out_i
+
+
+def _kernel(x_ref, r_ref, xsq_ref, rsq_ref, val_ref, idx_ref, *, k: int,
+            block_c: int):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)          # (BN, D)
+    r = r_ref[...].astype(jnp.float32)          # (BC, D)
+    d2 = (xsq_ref[...][:, None] + rsq_ref[...][None, :]
+          - 2.0 * jax.lax.dot_general(
+              x, r, (((1,), (1,)), ((), ())),
+              preferred_element_type=jnp.float32))
+    d2 = jnp.maximum(d2, 0.0)                   # (BN, BC)
+    col_ids = (j * block_c
+               + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1))
+    tile_v, tile_i = _k_smallest(d2, col_ids, k)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = tile_v
+        idx_ref[...] = tile_i
+
+    @pl.when(j > 0)
+    def _merge():
+        cand_v = jnp.concatenate([val_ref[...], tile_v], axis=1)
+        cand_i = jnp.concatenate([idx_ref[...], tile_i], axis=1)
+        new_v, new_i = _k_smallest(cand_v, cand_i, k)
+        val_ref[...] = new_v
+        idx_ref[...] = new_i
+
+
+def distance_topk_pallas(x: jax.Array, r: jax.Array, k: int,
+                         block_n: int = 256, block_c: int = 256,
+                         interpret: bool = False):
+    """x (N,D), r (C,D) -> (squared dists (N,k), ids (N,k)) ascending.
+
+    N % block_n == 0 and C % block_c == 0 are required (ops.py pads).
+    """
+    n, d = x.shape
+    c = r.shape[0]
+    assert n % block_n == 0 and c % block_c == 0, (n, c, block_n, block_c)
+    xsq = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
+    rsq = jnp.sum(r.astype(jnp.float32) ** 2, axis=1)
+    grid = (n // block_n, c // block_c)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, block_c=block_c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, r, xsq, rsq)

@@ -1,0 +1,54 @@
+"""jit'd wrapper: pads to block multiples, picks impl.
+
+impl="auto": Pallas on TPU, XLA reference otherwise (interpret mode is a
+correctness tool, not an execution path — CPU benchmarks use the ref).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance_topk.kernel import distance_topk_pallas
+from repro.kernels.distance_topk.ref import distance_topk_ref
+
+PAD_DIST = jnp.float32(2.9e38)
+
+
+def _pad_rows(a: jax.Array, mult: int):
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad:
+        a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    return a, n
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "block_n", "block_c",
+                                             "interpret"))
+def distance_topk(x: jax.Array, r: jax.Array, k: int, impl: str = "auto",
+                  block_n: int = 256, block_c: int = 256,
+                  interpret: bool = False):
+    """x (N,D), r (C,D) -> (squared L2 dists (N,k), rep ids (N,k)), ascending."""
+    if impl == "auto":
+        impl = "pallas" if jax.devices()[0].platform == "tpu" else "xla"
+    k_eff = min(k, r.shape[0])
+    if impl == "xla":
+        d, i = distance_topk_ref(x, r, k_eff)
+    else:
+        xp, n = _pad_rows(x, block_n)
+        rp, c = _pad_rows(r, block_c)
+        if rp.shape[0] != r.shape[0]:
+            # padded reps must never win: offset their squared norm
+            pad_rows = rp.shape[0] - r.shape[0]
+            rp = jnp.concatenate(
+                [rp[:c], jnp.full((pad_rows, r.shape[1]), 1e17, r.dtype)], 0)
+        d, i = distance_topk_pallas(xp, rp, k_eff, block_n=block_n,
+                                    block_c=block_c, interpret=interpret)
+        d, i = d[:n], i[:n]
+    if k_eff < k:  # fewer reps than k: tile the worst entry
+        d = jnp.concatenate([d, jnp.broadcast_to(d[:, -1:], (d.shape[0],
+                                                             k - k_eff))], 1)
+        i = jnp.concatenate([i, jnp.broadcast_to(i[:, -1:], (i.shape[0],
+                                                             k - k_eff))], 1)
+    return d, i

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for blocked pairwise-L2 + top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def distance_topk_ref(x: jax.Array, r: jax.Array, k: int):
+    """x (N,D), r (C,D) -> (dists (N,k), ids (N,k)), ascending by distance.
+
+    Distances are squared L2 (monotone in L2; callers take sqrt if needed).
+    """
+    xf = x.astype(jnp.float32)
+    rf = r.astype(jnp.float32)
+    d2 = (jnp.sum(xf * xf, axis=1)[:, None]
+          + jnp.sum(rf * rf, axis=1)[None, :]
+          - 2.0 * xf @ rf.T)
+    d2 = jnp.maximum(d2, 0.0)
+    neg_top, ids = jax.lax.top_k(-d2, k)
+    return -neg_top, ids

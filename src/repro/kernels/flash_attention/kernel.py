@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (forward): online-softmax over kv blocks with
+VMEM accumulators, GQA via BlockSpec index mapping, causal + sliding-window
+with *block-level skipping* expressed in the grid index map.
+
+Layout: q (B,H,S,hd); k/v (B,Hk,Skv,hd).  Grid (B*H, Sq/BQ, Skv/BK): the kv
+block index j sweeps innermost so the (BQ,hd) output block and the (BQ,)
+m/l accumulators stay resident in VMEM across the sweep (the standard TPU
+flash pattern).  GQA needs no materialized head expansion: the kv BlockSpec
+maps query-head bh -> kv-head bh // group.
+
+MXU alignment: BQ/BK default 512/512 with hd padded to a multiple of 128 by
+ops.py.  VMEM working set = q(BQ,hd) + k/v(BK,hd) + scores(BQ,BK) f32
+= 0.5-2 MiB for hd<=256 — well inside v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            window: int, seq_kv: int):
+    i = pl.program_id(1)   # q block
+    j = pl.program_id(2)   # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0].astype(jnp.float32)            # (BQ, hd)
+    k = k_ref[0].astype(jnp.float32)            # (BK, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < seq_kv
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 512, block_k: int = 512,
+                           seq_kv: int = 0, interpret: bool = False):
+    """q (B,H,S,hd), k/v (B,Hk,Skv,hd) padded to block multiples.
+
+    ``seq_kv``: logical kv length (<= padded Skv); padded keys are masked.
+    """
+    b, h, s, hd = q.shape
+    hk, skv = k.shape[1], k.shape[2]
+    g = h // hk
+    block_q = min(block_q, s)
+    block_k = min(block_k, skv)
+    assert s % block_q == 0 and skv % block_k == 0
+    grid = (b * h, s // block_q, skv // block_k)
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, seq_kv=seq_kv or skv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, i, j, g=g: (bh // g, j, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, i, j, g=g: (bh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(b * h, s, hd), k.reshape(b * hk, skv, hd),
+      v.reshape(b * hk, skv, hd)).reshape(b, h, s, hd)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q (B,S,H,hd), k/v (B,Skv,Hk,hd) -> (B,S,H,hd). Full-softmax oracle."""
+    b, s, h, hd = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, s, hk, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((s, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for one FPF step (distance to newest rep + running min +
+block argmax), fused so each step makes a single pass over the embedding
+matrix instead of three (DESIGN.md §3).
+
+FPF is inherently sequential in the number of representatives C (each argmax
+depends on the previous update); the TPU win is inside a step: the (BN, D)
+embedding tile is read once from HBM, the new distances, the min with the
+carried state, and the per-block (max, argmax) reduction all happen in VMEM.
+The tiny (n_blocks,) partials are reduced on the host side of the jit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, rep_ref, min_ref, newmin_ref, bmax_ref, bargmax_ref, *,
+            block_n: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)          # (BN, D)
+    rep = rep_ref[...].astype(jnp.float32)      # (1, D)
+    diff = x - rep
+    d2 = jnp.sum(diff * diff, axis=1)           # (BN,)
+    new_min = jnp.minimum(min_ref[...], d2)
+    newmin_ref[...] = new_min
+    am = jnp.argmax(new_min)
+    bmax_ref[0] = new_min[am]
+    bargmax_ref[0] = (i * block_n + am).astype(jnp.int32)
+
+
+def fpf_update_pallas(x: jax.Array, rep: jax.Array, min_d2: jax.Array,
+                      block_n: int = 1024, interpret: bool = False):
+    """x (N,D), rep (D,), min_d2 (N,) -> (new_min (N,), argmax, max).
+
+    N % block_n == 0 required (ops.py pads with -inf min so pads never win).
+    """
+    n, d = x.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    new_min, bmax, bargmax = pl.pallas_call(
+        functools.partial(_kernel, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, rep.reshape(1, -1), min_d2)
+    blk = jnp.argmax(bmax)
+    return new_min, bargmax[blk], bmax[blk]

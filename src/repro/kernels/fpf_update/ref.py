@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the FPF min-distance/argmax update step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fpf_update_ref(x: jax.Array, rep: jax.Array, min_d2: jax.Array):
+    """x (N,D), rep (D,), min_d2 (N,) -> (new_min_d2 (N,), argmax idx, max val).
+
+    new_min = min(min_d2, ||x - rep||^2); the argmax of new_min is the next
+    FPF representative (Gonzalez 1985).
+    """
+    d2 = jnp.sum((x.astype(jnp.float32) - rep.astype(jnp.float32)[None]) ** 2,
+                 axis=1)
+    new_min = jnp.minimum(min_d2, d2)
+    idx = jnp.argmax(new_min)
+    return new_min, idx.astype(jnp.int32), new_min[idx]

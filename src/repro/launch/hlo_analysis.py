@@ -1,0 +1,190 @@
+"""Post-SPMD HLO analysis: per-device collective wire bytes, scaled through
+while-loop bodies (scan trip counts parsed from loop conditions).
+
+``cost_analysis()`` does not report collective traffic, and counts while
+bodies once; this module parses ``compiled.as_text()`` instead:
+
+* every ``all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute`` op contributes *wire bytes per device* using ring
+  formulas over its replica-group size g:
+    - all-reduce:      2 (g-1)/g * result_bytes
+    - all-gather:        (g-1)/g * result_bytes
+    - reduce-scatter:    (g-1)/g * operand_bytes (= result*g)
+    - all-to-all:        (g-1)/g * result_bytes
+    - collective-permute:            result_bytes
+* computations reachable through ``while`` bodies are multiplied by the trip
+  count extracted from the loop condition's comparison constant.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_COMP_START_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w.\-]+)")
+_COND_OF_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:call|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [num_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(op: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * frac * result_bytes
+    if op == "all-gather":
+        return frac * result_bytes
+    if op == "reduce-scatter":
+        return frac * result_bytes * g
+    if op == "all-to-all":
+        return frac * result_bytes
+    if op == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    """Split HLO text into {computation_name: [lines]}."""
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    depth = 0
+    for line in hlo.splitlines():
+        if current is None:
+            m = _COMP_START_RE.match(line)
+            if m and "{" in line:
+                current = m.group(1)
+                comps[current] = []
+                depth = line.count("{") - line.count("}")
+                if depth <= 0:
+                    current = None
+        else:
+            depth += line.count("{") - line.count("}")
+            comps[current].append(line)
+            if depth <= 0:
+                current = None
+    return comps
+
+
+def analyze_collectives(hlo: str, default_group: int) -> Dict[str, object]:
+    """Returns {'wire_bytes_per_device', 'op_counts', 'by_op_bytes', 'loops'}."""
+    comps = parse_computations(hlo)
+
+    # trip counts: while ops referencing condition + body computations
+    trip_of_body: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _COND_OF_WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comps.get(cond, [])))]
+                trip_of_body[body] = max(consts) if consts else 1
+
+    # collectives + nested while refs per computation
+    local_bytes: Dict[str, float] = defaultdict(float)
+    local_counts: Dict[str, Dict[str, int]] = defaultdict(lambda: defaultdict(int))
+    children: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            mc = _COLL_RE.search(line)
+            if mc:
+                btys = _type_bytes(mc.group(1))
+                g = _group_size(line, default_group)
+                op = mc.group(2)
+                local_bytes[name] += _wire_bytes(op, btys, g)
+                local_counts[name][op] += 1
+            mw = _WHILE_RE.search(line)
+            if mw:
+                body = mw.group(1)
+                children[name].append((body, trip_of_body.get(body, 1)))
+
+    memo: Dict[str, float] = {}
+    count_memo: Dict[str, Dict[str, float]] = {}
+
+    def total(name: str, seen=()) -> float:
+        if name in memo:
+            return memo[name]
+        if name in seen:
+            return 0.0
+        t = local_bytes.get(name, 0.0)
+        for body, trips in children.get(name, ()):
+            t += trips * total(body, seen + (name,))
+        memo[name] = t
+        return t
+
+    def total_counts(name: str, seen=()) -> Dict[str, float]:
+        if name in count_memo:
+            return count_memo[name]
+        if name in seen:
+            return {}
+        out: Dict[str, float] = defaultdict(float)
+        for op, c in local_counts.get(name, {}).items():
+            out[op] += c
+        for body, trips in children.get(name, ()):
+            for op, c in total_counts(body, seen + (name,)).items():
+                out[op] += trips * c
+        count_memo[name] = dict(out)
+        return count_memo[name]
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: sum every computation once (upper-ish bound)
+        wire = sum(local_bytes.values())
+        counts = defaultdict(float)
+        for c in local_counts.values():
+            for op, n in c.items():
+                counts[op] += n
+        loops = {}
+    else:
+        wire = total(entry)
+        counts = total_counts(entry)
+        loops = {b: t for b, t in trip_of_body.items()}
+    return {
+        "wire_bytes_per_device": float(wire),
+        "op_counts": {k: float(v) for k, v in counts.items()},
+        "loops": loops,
+    }

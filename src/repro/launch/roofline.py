@@ -1,0 +1,201 @@
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute    = HLO_FLOPs  / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes  / (chips * 819e9   B/s HBM)
+    collective = wire_bytes / (chips * 50e9    B/s per ICI link)
+
+XLA cost analysis reports per-device numbers and counts scan bodies once, so
+totals use the scan-body scaling validated in EXPERIMENTS.md §Roofline:
+
+    per_device_total = full_graph + (n_repeats - 1) * block_graph
+
+(the ``__block`` JSONs are the standalone layer-block lowerings with identical
+shardings).  Collective wire bytes already include while-body trip scaling
+from the HLO parser, so they come straight from the full graph.
+
+MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill), 2*N_active*B (decode); the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, SHAPE_BY_NAME, cell_is_runnable, get_config
+from repro.launch import analytic
+from repro.launch.mesh import CHIPS_PER_POD, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _load(tag: str) -> Optional[dict]:
+    p = DRYRUN_DIR / f"{tag}.json"
+    if not p.exists():
+        return None
+    d = json.loads(p.read_text())
+    return d if d.get("status") == "ok" else None
+
+
+def model_flops(arch: str, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); enc-dec tokens split 50/50 so the
+    effective token count is halved (each token crosses ~half the stack)."""
+    cfg = get_config(arch)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if cfg.encoder_decoder:
+        tokens /= 2
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze_cell(arch: str, shape, mesh: str = "single",
+                 variant: str = "") -> Optional[dict]:
+    suffix = f"__{variant}" if variant else ""
+    full = _load(f"{arch}__{shape.name}__{mesh}{suffix}")
+    if full is None:
+        return None
+    block = _load(f"{arch}__{shape.name}__{mesh}__block{suffix}")
+    r = full["n_repeats"]
+    chips = full["n_devices"]
+
+    def scaled(key: str) -> float:
+        v = full.get(key) or 0.0
+        if block and block.get(key):
+            v += (r - 1) * block[key]
+        return v
+
+    hlo_flops_dev = scaled("flops_per_device")
+    hlo_bytes_dev = scaled("bytes_accessed_per_device")
+    # collectives: block-scaled like flops (HLO trip parsing is unreliable
+    # for jax's "wide" scan lowering); the full graph already holds one body.
+    # Train blocks differentiate wrt activations only (specs.py), so the
+    # stacked param-grad all-reduce is counted exactly once, in the full
+    # graph.
+    wire_dev = full.get("wire_bytes_per_device") or 0.0
+    if block and block.get("wire_bytes_per_device"):
+        wire_dev += (r - 1) * block["wire_bytes_per_device"]
+
+    # primary terms: exact analytic op model (see launch/analytic.py — HLO
+    # undercounts intra-layer scans and overcounts pre-fusion bytes)
+    import dataclasses
+    cfg = get_config(arch)
+    overrides = full.get("overrides") or {}
+    if overrides:
+        typed = {k: type(getattr(cfg, k))(v) for k, v in overrides.items()}
+        cfg = dataclasses.replace(cfg, **typed)
+    cost = analytic.cell_cost(cfg, shape)
+    flops_dev = cost.flops / chips
+    bytes_dev = cost.bytes / chips
+
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire_dev / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    mf = model_flops(arch, shape)
+    bound_s = max(compute_s, memory_s, collective_s)
+    ideal_s = mf / (chips * PEAK_FLOPS_BF16)
+    if shape.kind == "decode":
+        # decode is irreducibly memory-bound: the ideal step time is the
+        # minimal traffic (params + one cache read; ring-buffered writes)
+        min_cfg = dataclasses.replace(cfg, decode_ring=cfg.decode_ring or 256)
+        min_bytes = analytic.cell_cost(min_cfg, shape).bytes
+        ideal_s = max(ideal_s, min_bytes / (chips * HBM_BW))
+    return {
+        "arch": arch,
+        "shape": shape.name,
+        "mesh": mesh,
+        "chips": chips,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "analytic_flops_global": cost.flops,
+        "analytic_bytes_global": cost.bytes,
+        "hlo_flops_global": hlo_flops_dev * chips,
+        "hlo_bytes_global": hlo_bytes_dev * chips,
+        "hlo_vs_analytic_flops": (hlo_flops_dev * chips) / cost.flops
+        if cost.flops else 0.0,
+        "useful_ratio": mf / cost.flops if cost.flops else 0.0,
+        # fraction of roofline: ideal (model-FLOPs-limited) time over the
+        # dominant-term time — the score we hillclimb
+        "roofline_fraction": ideal_s / bound_s if bound_s else 0.0,
+        "peak_memory_gib": (full.get("peak_memory_bytes") or 0) / 2 ** 30,
+        "block_scaled": block is not None,
+        "variant": variant,
+    }
+
+
+def full_table(mesh: str = "single") -> List[dict]:
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            if not cell_is_runnable(arch, shape):
+                rows.append({"arch": arch, "shape": shape.name, "mesh": mesh,
+                             "skipped": True})
+                continue
+            cell = analyze_cell(arch, shape, mesh)
+            if cell:
+                rows.append(cell)
+    return rows
+
+
+def format_table(rows: List[dict]) -> str:
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dom':>10s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'peakGiB':>8s} {'hlo/ana':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} "
+                         f"{'— skipped (full attention @500k)':>40s}")
+            continue
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+            f"{100*r['roofline_fraction']:7.2f} {r['peak_memory_gib']:8.2f} "
+            f"{r['hlo_vs_analytic_flops']:8.3f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", default="")
+    ap.add_argument("--compare", nargs=3, metavar=("ARCH", "SHAPE", "VARIANT"),
+                    action="append", default=[],
+                    help="print baseline vs variant for one cell")
+    args = ap.parse_args()
+    if args.compare:
+        for arch, shape_name, variant in args.compare:
+            shape = SHAPE_BY_NAME[shape_name]
+            base = analyze_cell(arch, shape, args.mesh)
+            var = analyze_cell(arch, shape, args.mesh, variant=variant)
+            print(format_table([r for r in (base, var) if r]))
+            if base and var:
+                for term in ("compute_s", "memory_s", "collective_s"):
+                    b, v = base[term], var[term]
+                    print(f"  {term}: {b:.4f} -> {v:.4f} "
+                          f"({b/max(v,1e-12):.2f}x)")
+                print(f"  roofline: {100*base['roofline_fraction']:.2f}% -> "
+                      f"{100*var['roofline_fraction']:.2f}%")
+        return
+    rows = full_table(args.mesh)
+    print(format_table(rows))
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(rows, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Batched serving driver: prefill + decode with the sequence-sharded cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --preset ci \
+        --batch 4 --prompt-len 32 --decode-steps 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--preset", default="ci", choices=["ci", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.preset == "ci":
+        cfg = cfg.smoke()
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    b, s = args.batch, args.prompt_len
+    cache_len = s + args.decode_steps
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(b, s)),
+                          jnp.int32)
+
+    decode = jax.jit(lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg))
+
+    # prefill by replay (exact; see lm.prefill docstring)
+    t0 = time.time()
+    caches = lm.init_cache(cfg, b, cache_len)
+    tok = prompts[:, :1]
+    logits = None
+    for t in range(s):
+        logits, caches = decode(params, caches, prompts[:, t:t + 1],
+                                jnp.int32(t))
+    t1 = time.time()
+
+    out_tokens = []
+    tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    for t in range(args.decode_steps):
+        out_tokens.append(np.asarray(tok[:, 0]))
+        logits, caches = decode(params, caches, tok, jnp.int32(s + t))
+        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    t2 = time.time()
+    gen = np.stack(out_tokens, 1)
+    print(f"[serve] arch={cfg.name} batch={b} prefill={s} tok "
+          f"({(t1-t0):.2f}s) decode={args.decode_steps} tok "
+          f"({(t2-t1):.2f}s, {b*args.decode_steps/(t2-t1):.1f} tok/s)")
+    print(f"[serve] sample generation ids: {gen[0][:12].tolist()}")
+    assert gen.shape == (b, args.decode_steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""Abstract input specs per (arch x shape x mesh) cell.
+
+Everything is ``jax.ShapeDtypeStruct`` with a ``NamedSharding`` attached — the
+same pattern shannon/kernels uses: weak-type-correct, shardable, and zero
+device allocation, so a 398B-parameter training step lowers on a laptop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.models.common import PyTree, abstract_params
+from repro.optim.adamw import OptimizerConfig, opt_state_specs
+from repro.parallel import sharding as shd
+from repro.train import steps as steps_lib
+
+
+def _with_sharding(specs: PyTree, shardings: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs, shardings)
+
+
+def _seq_split(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[int, int]:
+    """(enc_len, dec_len): enc-dec archs split context 50/50 (DESIGN.md §6)."""
+    if cfg.encoder_decoder:
+        return shape.seq_len // 2, shape.seq_len // 2
+    return 0, shape.seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Tuple[PyTree, PyTree]:
+    """(abstract batch, shardings) for a train/prefill cell."""
+    b = shape.global_batch
+    enc_len, s = _seq_split(cfg, shape)
+    bspec = shd.batch_pspec(mesh, b, extra_dims=1,
+                            strategy=cfg.shard_strategy)
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    batch: Dict[str, Any] = {"tokens": tok}
+    shardings: Dict[str, Any] = {"tokens": NamedSharding(mesh, bspec)}
+    if shape.kind == "train":
+        batch["targets"] = tok
+        shardings["targets"] = NamedSharding(mesh, bspec)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        shardings["vision_embeds"] = NamedSharding(
+            mesh, shd.batch_pspec(mesh, b, extra_dims=2))
+    if cfg.encoder_decoder:
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        shardings["enc_embeds"] = NamedSharding(
+            mesh, shd.batch_pspec(mesh, b, extra_dims=2))
+    return _with_sharding(batch, shardings), shardings
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to AOT-lower one (arch x shape x mesh) cell."""
+    fn: Callable
+    args: Tuple[Any, ...]          # abstract ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    static: Dict[str, Any]
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               opt: Optional[OptimizerConfig] = None,
+               attn_impl: str = "xla") -> Cell:
+    pspecs = lm.model_specs(cfg)
+    if shape.kind == "train":
+        opt = opt or OptimizerConfig(state_dtype=cfg.opt_state_dtype)
+        psh = shd.param_shardings(pspecs, cfg, mesh)
+        params = _with_sharding(abstract_params(pspecs), psh)
+        ospecs = opt_state_specs(pspecs, opt)
+        mu_ps = shd.opt_pspecs(ospecs["mu"], cfg, mesh)
+        nu_ps = shd.opt_pspecs(ospecs["nu"], cfg, mesh)
+        osh = {"mu": jax.tree.map(lambda p: NamedSharding(mesh, p), mu_ps),
+               "nu": jax.tree.map(lambda p: NamedSharding(mesh, p), nu_ps),
+               "step": NamedSharding(mesh, P())}
+        ostate = {"mu": _with_sharding(abstract_params(ospecs["mu"]), osh["mu"]),
+                  "nu": _with_sharding(abstract_params(ospecs["nu"]), osh["nu"]),
+                  "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                               sharding=osh["step"])}
+        batch, bsh = batch_specs(cfg, shape, mesh)
+        fn = steps_lib.make_train_step(cfg, opt, attn_impl=attn_impl)
+        return Cell(fn, (params, ostate, batch), (psh, osh, bsh),
+                    (psh, osh, None), {"kind": "train"})
+
+    serve_fsdp = cfg.fsdp or shd.serve_needs_fsdp(cfg, mesh)
+    psh = shd.param_shardings(pspecs, cfg, mesh, fsdp=serve_fsdp)
+    params = _with_sharding(abstract_params(pspecs), psh)
+
+    if shape.kind == "prefill":
+        batch, bsh = batch_specs(cfg, shape, mesh)
+        fn = steps_lib.make_prefill_step(cfg, attn_impl=attn_impl)
+        return Cell(fn, (params, batch), (psh, bsh), None,
+                    {"kind": "prefill"})
+
+    # decode: one new token over a seq_len cache
+    b = shape.global_batch
+    enc_len, s = _seq_split(cfg, shape)
+    cspecs = lm.cache_specs(cfg, b, s, cross_len=enc_len)
+    csh = shd.cache_shardings(cspecs, cfg, mesh, b)
+    caches = _with_sharding(cspecs, csh)
+    tok_sh = NamedSharding(mesh, shd.batch_pspec(mesh, b, extra_dims=1))
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=tok_sh)
+    pos_sh = NamedSharding(mesh, P())
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=pos_sh)
+    fn = steps_lib.make_serve_step(cfg)
+    return Cell(fn, (params, caches, token, pos), (psh, csh, tok_sh, pos_sh),
+                (None, csh), {"kind": "decode"})
+
+
+# ---------------------------------------------------------------------------
+# Block-level cells (roofline accounting: cost = full + (R-1) x block)
+# ---------------------------------------------------------------------------
+
+def build_block_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     attn_impl: str = "xla") -> Cell:
+    """One layer-block lowered standalone with identical shardings.
+
+    XLA cost analysis counts while-loop bodies once; the per-(arch,shape)
+    roofline is ``cost(full scanned graph) + (n_repeats-1) * cost(block)``
+    (DESIGN.md §5, validated against a full unroll in EXPERIMENTS.md).
+    """
+    from repro.models import blocks as blocks_lib
+    from repro.models.common import stack_specs
+
+    b = shape.global_batch
+    enc_len, s = _seq_split(cfg, shape)
+    block_specs_tree = tuple(
+        stack_specs(t, 1) for t in blocks_lib.block_specs(
+            cfg, cross=cfg.encoder_decoder))
+    serve_fsdp = (shape.kind != "train") and (cfg.fsdp or
+                                              shd.serve_needs_fsdp(cfg, mesh))
+    bsh = shd.param_shardings(block_specs_tree, cfg, mesh,
+                              fsdp=cfg.fsdp if shape.kind == "train" else serve_fsdp)
+    bparams = _with_sharding(abstract_params(block_specs_tree), bsh)
+    hsp = shd.batch_pspec(mesh, b, extra_dims=2,
+                          strategy=cfg.shard_strategy)
+    if (cfg.shard_strategy in ("seq_dp", "ep_seq") and "model" in mesh.axis_names
+            and shape.kind != "decode" and s % mesh.shape["model"] == 0):
+        hsp = P(hsp[0], "model", None)  # sequence over model (seq_dp)
+    h_sh = NamedSharding(mesh, hsp)
+
+    if shape.kind == "decode":
+        # single-layer caches (leading dim 1): slicing layer 0 out of the full
+        # (R, ...) stack would charge the whole stack's bytes to the slice op
+        # in pre-fusion cost analysis and swamp the per-layer numbers
+        single = []
+        for pos_i, lspec in enumerate(cfg.pattern):
+            layer = blocks_lib.layer_cache_specs(
+                cfg, lspec, b, s, enc_len if cfg.encoder_decoder else 0)
+            single.append(jax.tree.map(
+                lambda t: jax.ShapeDtypeStruct((1,) + t.shape, t.dtype),
+                layer))
+        cspecs = tuple(single)
+        csh = shd.cache_shardings(cspecs, cfg, mesh, b)
+        caches = _with_sharding(cspecs, csh)
+        h = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.dtype(cfg.dtype),
+                                 sharding=h_sh)
+        pos_sh = NamedSharding(mesh, P())
+        pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=pos_sh)
+
+        def fn(bp, c, hh, pp):
+            bp1 = jax.tree.map(lambda a: a[0], bp)
+            c1 = jax.tree.map(lambda a: a[0], c)
+            out, nc = blocks_lib.block_decode(bp1, hh, c1, pp, cfg, angles=None)
+            # keep the stacked layout so out_shardings can pin the cache
+            # placement (otherwise XLA picks one and the boundary reshard
+            # pollutes the per-layer wire accounting)
+            nc = jax.tree.map(lambda a: a[None], nc)
+            return out, nc
+
+        return Cell(fn, (bparams, caches, h, pos), (bsh, csh, h_sh, pos_sh),
+                    (None, csh), {"kind": "decode_block"})
+
+    h = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype),
+                             sharding=h_sh)
+
+    if shape.kind == "train":
+        # Grads are taken wrt ACTIVATIONS only: the per-layer parameter-grad
+        # reduction is amortized into one stacked all-reduce in the real
+        # scanned graph (already counted in the full-graph artifact), so a
+        # per-block param AR/RS would double-count wire bytes.  Weight
+        # all-gathers (fsdp) still appear — W is used in fwd, remat and dgrad.
+        def fn(bp, hh):
+            bp1 = jax.tree.map(lambda a: a[0], bp)
+
+            def loss(h_):
+                out, aux = blocks_lib.block_fwd(bp1, h_, cfg, None, True,
+                                                attn_impl=attn_impl)
+                return jnp.mean(out.astype(jnp.float32) ** 2) + aux
+
+            if cfg.remat == "full":
+                lossf = jax.checkpoint(loss, prevent_cse=False)
+            else:
+                lossf = loss
+            return jax.grad(lossf)(hh)
+
+        return Cell(fn, (bparams, h), (bsh, h_sh), None,
+                    {"kind": "train_block"})
+
+    def fn(bp, hh):
+        bp1 = jax.tree.map(lambda a: a[0], bp)
+        out, _ = blocks_lib.block_fwd(bp1, hh, cfg, None, True,
+                                      attn_impl=attn_impl)
+        return out
+
+    return Cell(fn, (bparams, h), (bsh, h_sh), None, {"kind": "prefill_block"})

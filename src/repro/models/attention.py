@@ -1,0 +1,422 @@
+"""Grouped-query attention: training/prefill (blocked, flash-style in XLA) and
+single-token decode over a (possibly sequence-sharded) KV cache.
+
+Design notes (see DESIGN.md §4/§5):
+
+* QKV/O projections are stored *flattened* ``(d_model, n_heads*head_dim)`` and
+  column/row-sharded over the ``model`` mesh axis — head counts of the assigned
+  archs (40, 28, 4, ...) are not divisible by 16, but ``n_heads*head_dim``
+  always is.  Internal per-head shardings are left to the SPMD partitioner.
+
+* The XLA path computes attention with an **unrolled outer loop over query
+  blocks** and an inner ``lax.scan`` over key/value blocks with *static,
+  causally-trimmed trip counts* (q-block i only scans kv-blocks [0, i]): true
+  causal FLOPs (not the 2x of masked-full-blocks), flash-style O(S·block)
+  memory, and HLO that compiles in seconds.  The Pallas flash-attention kernel
+  (``repro.kernels.flash_attention``) is the TPU execution path; it is
+  validated against ``ref.py`` in interpret mode and selected with
+  ``impl="pallas"``.
+
+* Decode: one query token against a full cache.  The cache is sharded along
+  the *sequence* axis over ``model`` (flash-decoding style) — softmax over the
+  sharded axis lowers to two small all-reduces per layer, which is what makes
+  ``long_500k`` (batch=1) distributable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rope as rope_lib
+from repro.models.common import ParamSpec, PyTree, rmsnorm
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> PyTree:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    qd = cfg.n_heads * hd
+    kvd = cfg.n_kv_heads * hd
+    dt = jnp.dtype(cfg.param_dtype)
+    specs = {
+        "wq": ParamSpec((d, qd), ("embed", "heads"), dt),
+        "wk": ParamSpec((d, kvd), ("embed", "kv_heads"), dt),
+        "wv": ParamSpec((d, kvd), ("embed", "kv_heads"), dt),
+        "wo": ParamSpec((qd, d), ("heads", "embed"), dt),
+    }
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = ParamSpec((hd,), (None,), dt, init="ones")
+        specs["k_norm"] = ParamSpec((hd,), (None,), dt, init="ones")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params: PyTree, x: jax.Array, cfg: ModelConfig,
+                 kv_x: Optional[jax.Array] = None):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,Skv,Hk,hd)."""
+    hd = cfg.resolved_head_dim
+    kv_src = x if kv_x is None else kv_x
+    q = jnp.dot(x, params["wq"]).reshape(*x.shape[:2], cfg.n_heads, hd)
+    k = jnp.dot(kv_src, params["wk"]).reshape(*kv_src.shape[:2], cfg.n_kv_heads, hd)
+    v = jnp.dot(kv_src, params["wv"]).reshape(*kv_src.shape[:2], cfg.n_kv_heads, hd)
+    if "q_norm" in params:
+        q = rmsnorm({"scale": params["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": params["k_norm"]}, k, cfg.norm_eps)
+    return q, k, v
+
+
+def _out_proj(params: PyTree, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s = o.shape[:2]
+    return jnp.dot(o.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim), params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Blocked attention core (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_attend(q, k, v, q_start, kv_start, scale, causal, window,
+                  q_positions=None):
+    """One (q-block, kv-block) tile -> (scores-applied v, running max, sum).
+
+    q (B,Sq,Hk,G,hd); k/v (B,Bk,Hk,hd).  Returns unnormalized o, m, l.
+    """
+    sq, bk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k) * scale  # (B,Hk,G,Sq,Bk) bf16->f32
+    s = s.astype(jnp.float32)
+    qpos = (q_start + jnp.arange(sq)) if q_positions is None else q_positions
+    kpos = kv_start + jnp.arange(bk)
+    mask = jnp.ones((sq, bk), jnp.bool_)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # (B,Hk,G,Sq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return o, m, l
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      cfg: ModelConfig, causal: bool,
+                      window: int = 0) -> jax.Array:
+    """Flash-style attention in pure XLA.
+
+    q (B,S,H,hd), k/v (B,Skv,Hk,hd).  Outer unrolled loop over q blocks; inner
+    lax.scan over kv blocks with causally/window-trimmed static trip counts.
+    """
+    b, s, h, hd = q.shape
+    skv = k.shape[1]
+    hk = cfg.n_kv_heads
+    g = h // hk
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(cfg.attn_block_q, s)
+    bk = min(cfg.attn_block_k, skv)
+    assert s % bq == 0 and skv % bk == 0, (s, bq, skv, bk)
+    nq, nk = s // bq, skv // bk
+    qg = q.reshape(b, s, hk, g, hd)
+
+    out_blocks = []
+    for i in range(nq):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, i * bq, bq, axis=1)
+        q_start = i * bq
+        # static kv range for this q block
+        if causal:
+            hi = i + 1  # kv blocks fully above the diagonal are skipped
+        else:
+            hi = nk
+        lo = 0
+        if window:
+            lo = max(0, (q_start - window + 1) // bk)
+        n_trips = hi - lo
+
+        def body(carry, j):
+            o_acc, m_acc, l_acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, (lo + j) * bk, bk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, (lo + j) * bk, bk, axis=1)
+            o, m, l = _block_attend(q_blk, k_blk, v_blk, q_start,
+                                    (lo + j) * bk, scale, causal, window)
+            m_new = jnp.maximum(m_acc, m)
+            alpha = jnp.exp(m_acc - m_new)
+            beta = jnp.exp(m - m_new)
+            l_new = l_acc * alpha + l * beta
+            o_new = (o_acc * alpha[..., None].astype(o.dtype)
+                     + o.transpose(0, 2, 3, 1, 4) * beta[..., None].astype(o.dtype))
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, hk, g, bq, hd), jnp.float32)
+        m0 = jnp.full((b, hk, g, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, bq), jnp.float32)
+        (o_f, m_f, l_f), _ = jax.lax.scan(body, (o0, m0, l0), jnp.arange(n_trips))
+        o_norm = o_f / jnp.maximum(l_f, 1e-30)[..., None]
+        out_blocks.append(o_norm.transpose(0, 3, 1, 2, 4).reshape(b, bq, h, hd))
+    return jnp.concatenate(out_blocks, axis=1).astype(q.dtype)
+
+
+def _local_blocked_attention(q, k, v, cfg: ModelConfig, q_start, causal: bool,
+                             window: int) -> jax.Array:
+    """Blocked attention for a LOCAL q chunk against full K/V, with a traced
+    sequence offset ``q_start`` and a causally-trimmed *dynamic* kv loop
+    (fori_loop; trip count depends on the shard index)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    hk = cfg.n_kv_heads
+    g = h // hk
+    scale = 1.0 / math.sqrt(hd)
+    bk = min(cfg.attn_block_k, skv)
+    assert skv % bk == 0
+    nk = skv // bk
+    qg = q.reshape(b, sq, hk, g, hd)
+    q_positions = q_start + jnp.arange(sq)
+
+    def body(j, carry):
+        o_acc, m_acc, l_acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=1)
+        o, m, l = _block_attend(qg, k_blk, v_blk, 0, j * bk, scale, causal,
+                                window, q_positions=q_positions)
+        m_new = jnp.maximum(m_acc, m)
+        alpha = jnp.exp(m_acc - m_new)
+        beta = jnp.exp(m - m_new)
+        l_new = l_acc * alpha + l * beta
+        o_new = (o_acc * alpha[..., None]
+                 + o.transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+                 * beta[..., None])
+        return (o_new, m_new, l_new)
+
+    if causal:
+        hi = (q_start + sq + bk - 1) // bk  # traced upper bound
+    else:
+        hi = nk
+    lo = 0
+    if window:
+        lo = jnp.maximum(0, (q_start - window + 1) // bk)
+    o0 = jnp.zeros((b, hk, g, sq, hd), jnp.float32)
+    m0 = jnp.full((b, hk, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, sq), jnp.float32)
+    o_f, m_f, l_f = jax.lax.fori_loop(lo, hi, body, (o0, m0, l0))
+    o_norm = o_f / jnp.maximum(l_f, 1e-30)[..., None]
+    return o_norm.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _seq_dp_attention(q, k, v, cfg: ModelConfig, causal: bool, window: int):
+    """Sequence-parallel blockwise attention (seq_dp strategy).
+
+    Each ``model`` shard owns S/n_model query positions; K/V are all-gathered
+    ONCE per layer (tiled), and the causally-needed kv prefix is walked with a
+    dynamic fori_loop — per-layer wire is exactly the KV bytes, and compute
+    splits causally-balanced-enough across shards (shard i does (i+1)/n of the
+    score work; the imbalance is the known cost of contiguous partitioning —
+    see EXPERIMENTS.md §Perf prefill iteration 4).
+    """
+    try:
+        from jax.experimental.shard_map import shard_map
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in mesh.axis_names:
+            return None
+        batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        n_model = mesh.shape["model"]
+        if q.shape[1] % n_model or k.shape[1] % n_model:
+            return None
+        from jax.sharding import PartitionSpec as P
+        spec = P(batch_ax, "model", None, None)
+
+        def local(qs, ks, vs):
+            kf = jax.lax.all_gather(ks, "model", axis=1, tiled=True)
+            vf = jax.lax.all_gather(vs, "model", axis=1, tiled=True)
+            idx = jax.lax.axis_index("model")
+            q_start = idx * qs.shape[1]
+            return _local_blocked_attention(qs, kf, vf, cfg, q_start, causal,
+                                            window)
+
+        fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                       out_specs=spec, check_rep=False)
+        return fn(q, k, v)
+    except Exception:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def _replicate_seq(t: jax.Array) -> jax.Array:
+    """Force one explicit KV gather per layer under seq_dp (XLA otherwise
+    re-gathers the sequence-sharded KV for every unrolled q block — the
+    refuted first attempt in EXPERIMENTS.md §Perf/prefill)."""
+    from jax.sharding import PartitionSpec as P
+    for batch_ax in (("pod", "data"), ("data",)):
+        try:
+            return jax.lax.with_sharding_constraint(
+                t, P(batch_ax, *([None] * (t.ndim - 1))))
+        except (RuntimeError, ValueError, KeyError):
+            continue
+    return t
+
+
+def attention_fwd(params: PyTree, x: jax.Array, cfg: ModelConfig,
+                  causal: bool = True, angles: Optional[jax.Array] = None,
+                  kv_x: Optional[jax.Array] = None,
+                  impl: str = "xla") -> jax.Array:
+    """Full-sequence attention (training / prefill).  kv_x -> cross-attention."""
+    q, k, v = _project_qkv(params, x, cfg, kv_x)
+    if angles is not None and kv_x is None:
+        q = rope_lib.apply_rope(q, angles)
+        k = rope_lib.apply_rope(k, angles)
+    if cfg.shard_strategy in ("seq_dp", "ep_seq") and kv_x is None:
+        out = _seq_dp_attention(q, k, v, cfg, causal=causal,
+                                window=cfg.sliding_window)
+        if out is not None:
+            return _out_proj(params, out, cfg)
+        # no mesh / model axis available: fall back to explicit KV gather
+        k = _replicate_seq(k)
+        v = _replicate_seq(v)
+    window = cfg.sliding_window if kv_x is None else 0
+    if impl == "pallas" or impl == "pallas_interpret":
+        from repro.kernels.flash_attention import ops as flash_ops
+        o = flash_ops.flash_attention(
+            q, k, v, causal=causal, window=window,
+            interpret=(impl == "pallas_interpret"))
+    else:
+        o = blocked_attention(q, k, v, cfg, causal=causal and kv_x is None,
+                              window=window)
+    return _out_proj(params, o, cfg)
+
+
+def attention_decode(params: PyTree, x: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, pos, cfg: ModelConfig,
+                     angles: Optional[jax.Array] = None,
+                     cross: bool = False,
+                     update_cache: bool = True):
+    """One-token decode.  x (B,1,D); cache_k/v (B,S,Hk,hd) seq-sharded.
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v).  For cross-attention the
+    cache holds precomputed encoder K/V and is not updated.
+    """
+    b, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    hk, h = cfg.n_kv_heads, cfg.n_heads
+    g = h // hk
+    q = jnp.dot(x, params["wq"]).reshape(b, 1, h, hd)
+    if "q_norm" in params:
+        q = rmsnorm({"scale": params["q_norm"]}, q, cfg.norm_eps)
+    if angles is not None:
+        q = rope_lib.apply_rope(q, angles)
+    if not cross:
+        k_new = jnp.dot(x, params["wk"]).reshape(b, 1, hk, hd)
+        v_new = jnp.dot(x, params["wv"]).reshape(b, 1, hk, hd)
+        if "k_norm" in params:
+            k_new = rmsnorm({"scale": params["k_norm"]}, k_new, cfg.norm_eps)
+        if angles is not None:
+            k_new = rope_lib.apply_rope(k_new, angles)
+        if update_cache:
+            s = cache_k.shape[1]
+            slot = pos % s
+            if cfg.decode_cache_update == "dus":
+                # single-slot write: O(1) HBM traffic; SPMD turns this into a
+                # masked update on the owning sequence shard only
+                cache_k = jax.lax.dynamic_update_slice_in_dim(
+                    cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
+                cache_v = jax.lax.dynamic_update_slice_in_dim(
+                    cache_v, v_new.astype(cache_v.dtype), slot, axis=1)
+            else:
+                # ring-buffer write via one-hot mask (baseline; rewrites the
+                # full cache — see EXPERIMENTS.md §Perf decode hillclimb)
+                onehot = (jnp.arange(s) == slot)[None, :, None, None]
+                cache_k = jnp.where(onehot, k_new.astype(cache_k.dtype),
+                                    cache_k)
+                cache_v = jnp.where(onehot, v_new.astype(cache_v.dtype),
+                                    cache_v)
+    s = cache_k.shape[1]
+    qg = q.reshape(b, 1, hk, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, cache_k) / math.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    if not cross:
+        kpos = jnp.arange(s)
+        valid = (kpos <= pos)[None, :]  # (1, S) causal within cache
+        if cfg.sliding_window:
+            valid &= (pos - kpos < cfg.sliding_window)[None, :]
+        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgst,btkh->bskgh", (p / l).astype(cache_v.dtype), cache_v)
+    out = _out_proj(params, o.reshape(b, 1, h, hd), cfg)
+    return out, cache_k, cache_v
+
+
+def attention_decode_two_tier(params: PyTree, x: jax.Array, main_k, main_v,
+                              ring_k, ring_v, pos, cfg: ModelConfig,
+                              angles=None):
+    """Two-tier decode (§Perf decode hillclimb): the S-token main cache is
+    READ-ONLY; the new token's K/V go into a small ring of recent tokens
+    (slot i holds absolute position S+i while the ring fills; the host merges
+    ring -> main every ``decode_ring`` steps, amortized O(1)).  Per-step HBM
+    writes therefore touch O(ring) bytes instead of O(S).
+
+    Returns (out (B,1,D), new_ring_k, new_ring_v).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    hk, h = cfg.n_kv_heads, cfg.n_heads
+    g = h // hk
+    s = main_k.shape[1]
+    w = ring_k.shape[1]
+    q = jnp.dot(x, params["wq"]).reshape(b, 1, h, hd)
+    k_new = jnp.dot(x, params["wk"]).reshape(b, 1, hk, hd)
+    v_new = jnp.dot(x, params["wv"]).reshape(b, 1, hk, hd)
+    if "q_norm" in params:
+        q = rmsnorm({"scale": params["q_norm"]}, q, cfg.norm_eps)
+        k_new = rmsnorm({"scale": params["k_norm"]}, k_new, cfg.norm_eps)
+    if angles is not None:
+        q = rope_lib.apply_rope(q, angles)
+        k_new = rope_lib.apply_rope(k_new, angles)
+    slot = (pos - s) % w
+    onehot = (jnp.arange(w) == slot)[None, :, None, None]
+    ring_k = jnp.where(onehot, k_new.astype(ring_k.dtype), ring_k)
+    ring_v = jnp.where(onehot, v_new.astype(ring_v.dtype), ring_v)
+
+    qg = q.reshape(b, 1, hk, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s_main = (jnp.einsum("bskgh,btkh->bkgst", qg, main_k) * scale
+              ).astype(jnp.float32)
+    s_ring = (jnp.einsum("bskgh,btkh->bkgst", qg, ring_k) * scale
+              ).astype(jnp.float32)
+    kpos_main = jnp.arange(s)
+    kpos_ring = s + jnp.arange(w)
+    valid_main = (kpos_main <= pos)[None, :]
+    valid_ring = (kpos_ring <= pos)[None, :]
+    if cfg.sliding_window:
+        valid_main &= (pos - kpos_main < cfg.sliding_window)[None, :]
+        valid_ring &= (pos - kpos_ring < cfg.sliding_window)[None, :]
+    s_main = jnp.where(valid_main[None, None, None], s_main, NEG_INF)
+    s_ring = jnp.where(valid_ring[None, None, None], s_ring, NEG_INF)
+    # flash-style merge of the two pieces — NO concat: the main scores stay
+    # sequence-sharded (their max/sum lower to small all-reduces) while the
+    # ring piece is shard-local; concatenating differently-sharded tensors
+    # would force a gather + replicated compute (refuted iteration 2).
+    m_main = jnp.max(s_main, axis=-1, keepdims=True)
+    m_ring = jnp.max(s_ring, axis=-1, keepdims=True)
+    m = jnp.maximum(m_main, m_ring)
+    p_main = jnp.exp(s_main - m)
+    p_ring = jnp.exp(s_ring - m)
+    l = (jnp.sum(p_main, axis=-1, keepdims=True)
+         + jnp.sum(p_ring, axis=-1, keepdims=True))
+    o = (jnp.einsum("bkgst,btkh->bskgh", (p_main / l).astype(main_v.dtype),
+                    main_v)
+         + jnp.einsum("bkgst,btkh->bskgh", (p_ring / l).astype(ring_v.dtype),
+                      ring_v))
+    out = _out_proj(params, o.reshape(b, 1, h, hd), cfg)
+    return out, ring_k, ring_v

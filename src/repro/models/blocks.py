@@ -1,0 +1,188 @@
+"""Layer-block assembly: (norm -> mixer -> residual) + (norm -> mlp -> residual)
+per :class:`repro.configs.base.LayerSpec`, with decode variants threading
+per-layer state.  One *block* = one period of the config's repeating pattern;
+``lm.py`` scans over ``n_repeats`` blocks with stacked parameters.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention, mamba, mlp, moe, xlstm
+from repro.models.common import ParamSpec, PyTree, rmsnorm, rmsnorm_specs
+
+
+def layer_specs(cfg: ModelConfig, spec: LayerSpec, cross: bool = False) -> PyTree:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    out: Dict[str, Any] = {"norm1": rmsnorm_specs(d, dt)}
+    if spec.mixer == "attn":
+        out["attn"] = attention.attention_specs(cfg)
+    elif spec.mixer == "mamba":
+        out["mamba"] = mamba.mamba_specs(cfg)
+    elif spec.mixer == "mlstm":
+        out["mlstm"] = xlstm.mlstm_specs(cfg)
+    elif spec.mixer == "slstm":
+        out["slstm"] = xlstm.slstm_specs(cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cross:
+        out["norm_cross"] = rmsnorm_specs(d, dt)
+        out["cross_attn"] = attention.attention_specs(cfg, cross=True)
+    if spec.mlp == "dense":
+        out["norm2"] = rmsnorm_specs(d, dt)
+        out["mlp"] = mlp.mlp_specs(cfg)
+    elif spec.mlp == "moe":
+        out["norm2"] = rmsnorm_specs(d, dt)
+        out["moe"] = moe.moe_specs(cfg)
+    return out
+
+
+def block_specs(cfg: ModelConfig, cross: bool = False) -> Tuple[PyTree, ...]:
+    """One period: a tuple of per-position layer spec trees."""
+    return tuple(layer_specs(cfg, s, cross=cross) for s in cfg.pattern)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def layer_fwd(params: PyTree, h: jax.Array, cfg: ModelConfig, spec: LayerSpec,
+              angles: Optional[jax.Array], causal: bool,
+              enc_out: Optional[jax.Array] = None,
+              attn_impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
+    """Returns (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = rmsnorm(params["norm1"], h, cfg.norm_eps)
+    if spec.mixer == "attn":
+        mixed = attention.attention_fwd(params["attn"], x, cfg, causal=causal,
+                                        angles=angles, impl=attn_impl)
+    elif spec.mixer == "mamba":
+        mixed = mamba.mamba_fwd(params["mamba"], x, cfg)
+    elif spec.mixer == "mlstm":
+        mixed = xlstm.mlstm_fwd(params["mlstm"], x, cfg)
+    elif spec.mixer == "slstm":
+        mixed = xlstm.slstm_fwd(params["slstm"], x, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    h = h + mixed
+    if "cross_attn" in params and enc_out is not None:
+        xc = rmsnorm(params["norm_cross"], h, cfg.norm_eps)
+        h = h + attention.attention_fwd(params["cross_attn"], xc, cfg,
+                                        causal=False, angles=None,
+                                        kv_x=enc_out, impl=attn_impl)
+    if spec.mlp == "dense":
+        x2 = rmsnorm(params["norm2"], h, cfg.norm_eps)
+        h = h + mlp.mlp_fwd(params["mlp"], x2)
+    elif spec.mlp == "moe":
+        x2 = rmsnorm(params["norm2"], h, cfg.norm_eps)
+        out, aux_l = moe.moe_fwd(params["moe"], x2, cfg)
+        h = h + out
+        aux = aux + aux_l
+    return h, aux
+
+
+def block_fwd(params_tuple: Tuple[PyTree, ...], h: jax.Array, cfg: ModelConfig,
+              angles: Optional[jax.Array], causal: bool,
+              enc_out: Optional[jax.Array] = None,
+              attn_impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    for pos, spec in enumerate(cfg.pattern):
+        h, a = layer_fwd(params_tuple[pos], h, cfg, spec, angles, causal,
+                         enc_out=enc_out, attn_impl=attn_impl)
+        aux = aux + a
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, stateful)
+# ---------------------------------------------------------------------------
+
+def layer_cache_specs(cfg: ModelConfig, spec: LayerSpec, batch: int, seq: int,
+                      cross_len: int = 0) -> PyTree:
+    """Abstract per-layer decode state."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        kv = jax.ShapeDtypeStruct((batch, seq, cfg.n_kv_heads, hd), dt)
+        out["k"], out["v"] = kv, kv
+        if cfg.decode_ring:
+            ring = jax.ShapeDtypeStruct(
+                (batch, cfg.decode_ring, cfg.n_kv_heads, hd), dt)
+            out["ring_k"], out["ring_v"] = ring, ring
+    elif spec.mixer == "mamba":
+        out.update(mamba.mamba_cache_specs(cfg, batch))
+    elif spec.mixer == "mlstm":
+        h = cfg.n_heads
+        hd_m = cfg.mlstm_inner // h
+        out["c"] = jax.ShapeDtypeStruct((batch, h, hd_m, hd_m), jnp.float32)
+        out["n"] = jax.ShapeDtypeStruct((batch, h, hd_m), jnp.float32)
+    elif spec.mixer == "slstm":
+        for name in ("c", "n", "m", "h"):
+            out[name] = jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.float32)
+    if cross_len:
+        ckv = jax.ShapeDtypeStruct((batch, cross_len, cfg.n_kv_heads, hd), dt)
+        out["cross_k"], out["cross_v"] = ckv, ckv
+    return out
+
+
+def layer_decode(params: PyTree, h: jax.Array, cache: PyTree, pos,
+                 cfg: ModelConfig, spec: LayerSpec,
+                 angles: Optional[jax.Array]) -> Tuple[jax.Array, PyTree]:
+    new_cache = dict(cache)
+    x = rmsnorm(params["norm1"], h, cfg.norm_eps)
+    if spec.mixer == "attn":
+        if cfg.decode_ring:
+            mixed, rk, rv = attention.attention_decode_two_tier(
+                params["attn"], x, cache["k"], cache["v"], cache["ring_k"],
+                cache["ring_v"], pos, cfg, angles=angles)
+            new_cache["ring_k"], new_cache["ring_v"] = rk, rv
+        else:
+            mixed, k, v = attention.attention_decode(
+                params["attn"], x, cache["k"], cache["v"], pos, cfg,
+                angles=angles)
+            new_cache["k"], new_cache["v"] = k, v
+    elif spec.mixer == "mamba":
+        mixed, conv, hst = mamba.mamba_decode(params["mamba"], x,
+                                              cache["conv"], cache["h"], cfg)
+        new_cache["conv"], new_cache["h"] = conv, hst
+    elif spec.mixer == "mlstm":
+        mixed, c, n = xlstm.mlstm_decode(params["mlstm"], x, cache["c"],
+                                         cache["n"], cfg)
+        new_cache["c"], new_cache["n"] = c, n
+    elif spec.mixer == "slstm":
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+        mixed, state = xlstm.slstm_decode(params["slstm"], x, state, cfg)
+        (new_cache["c"], new_cache["n"], new_cache["m"],
+         new_cache["h"]) = state
+    else:
+        raise ValueError(spec.mixer)
+    h = h + mixed
+    if "cross_attn" in params:
+        xc = rmsnorm(params["norm_cross"], h, cfg.norm_eps)
+        mixed, _, _ = attention.attention_decode(
+            params["cross_attn"], xc, cache["cross_k"], cache["cross_v"],
+            pos, cfg, angles=None, cross=True)
+        h = h + mixed
+    if spec.mlp == "dense":
+        x2 = rmsnorm(params["norm2"], h, cfg.norm_eps)
+        h = h + mlp.mlp_fwd(params["mlp"], x2)
+    elif spec.mlp == "moe":
+        x2 = rmsnorm(params["norm2"], h, cfg.norm_eps)
+        out, _ = moe.moe_fwd(params["moe"], x2, cfg)
+        h = h + out
+    return h, new_cache
+
+
+def block_decode(params_tuple: Tuple[PyTree, ...], h: jax.Array,
+                 caches: Tuple[PyTree, ...], pos, cfg: ModelConfig,
+                 angles: Optional[jax.Array]):
+    new_caches = []
+    for p, spec in enumerate(cfg.pattern):
+        h, c = layer_decode(params_tuple[p], h, caches[p], pos, cfg, spec, angles)
+        new_caches.append(c)
+    return h, tuple(new_caches)

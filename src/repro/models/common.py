@@ -1,0 +1,116 @@
+"""Minimal functional parameter system + shared layers.
+
+We deliberately avoid a module framework: parameters are nested dicts of
+arrays, and each layer exposes ``*_specs(cfg) -> tree of ParamSpec`` and an
+``apply``-style function.  ``ParamSpec`` carries *logical axis names* which
+``repro.parallel.sharding`` maps to mesh ``PartitionSpec``s — the same spec
+tree therefore drives ``jax.eval_shape``-based AOT lowering (no allocation)
+and real initialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]  # one name per dim (None = replicated)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | conv | small
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (self.shape, self.logical_axes)
+
+
+def is_spec_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_map(fn: Callable[[ParamSpec], Any], tree: PyTree) -> PyTree:
+    return jax.tree.map(fn, tree, is_leaf=is_spec_leaf)
+
+
+def abstract_params(specs: PyTree) -> PyTree:
+    """ParamSpec tree -> ShapeDtypeStruct tree (for eval_shape / AOT)."""
+    return spec_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def init_params(specs: PyTree, key: jax.Array) -> PyTree:
+    """Materialize parameters (smoke tests / real training on CPU)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec_leaf)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = spec.init_scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+def stacked(spec: ParamSpec, n: int, axis_name: str = "layers") -> ParamSpec:
+    """Add a leading stacked-layer dimension (for scan-over-layers)."""
+    return ParamSpec((n,) + spec.shape, (axis_name,) + spec.logical_axes,
+                     spec.dtype, spec.init, spec.init_scale)
+
+
+def stack_specs(tree: PyTree, n: int) -> PyTree:
+    return spec_map(lambda s: stacked(s, n), tree)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(d: int, dtype) -> PyTree:
+    return {"scale": ParamSpec((d,), (None,), dtype, init="ones")}
+
+
+def rmsnorm(params: PyTree, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_specs(d: int, dtype) -> PyTree:
+    return {"scale": ParamSpec((d,), (None,), dtype, init="ones"),
+            "bias": ParamSpec((d,), (None,), dtype, init="zeros")}
+
+
+def layernorm(params: PyTree, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def take_layer(params: PyTree, i) -> PyTree:
+    """Slice layer ``i`` out of a stacked parameter tree."""
+    return jax.tree.map(lambda a: a[i], params)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

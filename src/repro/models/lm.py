@@ -1,0 +1,317 @@
+"""Unified LM: decoder-only (dense / MoE / hybrid / SSM / VLM) and
+encoder-decoder (audio) — built from ``repro.models.blocks``.
+
+Structure: per-position parameter trees stacked over ``n_repeats`` and scanned
+(``lax.scan``) with optional per-block remat — this keeps HLO size and AOT
+compile times flat in depth (72-layer jamba compiles like a 8-layer model).
+
+Sharding is injected from the outside (``repro.parallel.sharding``): every
+ParamSpec carries logical axis names; activations get ``with_sharding_constraint``
+at block boundaries only (batch over ("pod","data")), internals are left to the
+SPMD partitioner (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import blocks, rope as rope_lib
+from repro.models.common import (ParamSpec, PyTree, abstract_params,
+                                 init_params, rmsnorm, rmsnorm_specs,
+                                 stack_specs, take_layer)
+
+BATCH_AXES = ("pod", "data")
+
+
+def _constrain_batch(h: jax.Array, cfg=None) -> jax.Array:
+    """Activation constraint at block boundaries (no-op without a mesh).
+
+    megatron: batch over (pod, data).  pure_dp: batch over (pod, data, model).
+    seq_dp: batch over (pod, data) and *sequence* over model — weights are
+    replicated, so MLP/norms stay collective-free and attention gathers KV
+    once per layer (the prefill hillclimb, EXPERIMENTS.md §Perf).
+    """
+    strategy = getattr(cfg, "shard_strategy", "megatron") if cfg else "megatron"
+    candidates = []
+    for batch_ax in (BATCH_AXES, ("data",)):  # multi-pod first, then single
+        if strategy == "pure_dp":
+            candidates.append(P(batch_ax + ("model",),
+                                *([None] * (h.ndim - 1))))
+        elif strategy in ("seq_dp", "ep_seq") and h.ndim >= 2:
+            candidates.append(P(batch_ax, "model", *([None] * (h.ndim - 2))))
+    for batch_ax in (BATCH_AXES, ("data",)):
+        candidates.append(P(batch_ax, *([None] * (h.ndim - 1))))
+    for spec in candidates:
+        try:
+            return jax.lax.with_sharding_constraint(h, spec)
+        except (RuntimeError, ValueError, KeyError):
+            continue
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def model_specs(cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    v = cfg.padded_vocab
+    dt = jnp.dtype(cfg.param_dtype)
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), dt),
+        "blocks": tuple(stack_specs(t, cfg.n_repeats)
+                        for t in blocks.block_specs(cfg, cross=cfg.encoder_decoder)),
+        "final_norm": rmsnorm_specs(d, dt),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, v), ("embed", "vocab"), dt)
+    if cfg.encoder_decoder:
+        enc_layer = blocks.layer_specs(cfg, LayerSpec("attn", "dense"))
+        specs["encoder"] = {
+            "blocks": (stack_specs(enc_layer, cfg.n_encoder_layers),),
+            "final_norm": rmsnorm_specs(d, dt),
+        }
+    return specs
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    return init_params(model_specs(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# Pieces
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params: PyTree, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _angles_for(cfg: ModelConfig, batch: int, seq: int,
+                positions: Optional[jax.Array] = None) -> Optional[jax.Array]:
+    if not any(s.mixer == "attn" for s in cfg.pattern):
+        return None
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections:
+        if positions is not None:
+            # decode: a text token past the vision prefix has identical
+            # (t,h,w) positions = pos - vision_tokens + 1
+            p = jnp.asarray(positions) - cfg.vision_tokens + 1
+            pos3 = jnp.broadcast_to(p.reshape(1, 1, 1), (3, batch, 1))
+        else:
+            pos3 = rope_lib.mrope_positions(batch, seq, cfg.vision_tokens,
+                                            cfg.vision_grid)
+        return rope_lib.mrope_angles(pos3, hd, cfg.rope_theta,
+                                     cfg.mrope_sections)
+    pos = (jnp.arange(seq)[None, :] if positions is None
+           else jnp.broadcast_to(jnp.asarray(positions).reshape(1, 1), (batch, 1)))
+    if positions is None:
+        pos = jnp.broadcast_to(pos, (batch, seq))
+    return rope_lib.rope_angles(pos, hd, cfg.rope_theta)
+
+
+def _run_blocks(params: PyTree, h: jax.Array, cfg: ModelConfig,
+                angles, causal: bool, enc_out=None,
+                attn_impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
+    """Scan over n_repeats stacked blocks; returns (h, aux_loss)."""
+
+    def body(carry, block_params):
+        hh = _constrain_batch(carry, cfg)
+        hh, aux = blocks.block_fwd(block_params, hh, cfg, angles, causal,
+                                   enc_out=enc_out, attn_impl=attn_impl)
+        return hh, aux
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.unroll_layers:
+        # methodology validation (EXPERIMENTS.md §Roofline): unrolled layers
+        # make XLA cost analysis count every layer — ground truth for the
+        # scan-once + block-scaling accounting
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_repeats):
+            h, aux = body(h, jax.tree.map(lambda a: a[i], params["blocks"]))
+            aux_total = aux_total + aux
+        return h, aux_total
+    h, auxs = jax.lax.scan(body, h, params["blocks"])
+    return h, jnp.sum(auxs)
+
+
+def _merge_vision(cfg: ModelConfig, h: jax.Array,
+                  vision_embeds: Optional[jax.Array]) -> jax.Array:
+    if not cfg.vision_tokens or vision_embeds is None:
+        return h
+    vt = cfg.vision_tokens
+    s = h.shape[1]
+    vis = jnp.pad(vision_embeds.astype(h.dtype),
+                  ((0, 0), (0, s - vt), (0, 0)))
+    mask = (jnp.arange(s) < vt)[None, :, None]
+    return jnp.where(mask, vis, h)
+
+
+def encode(params: PyTree, enc_embeds: jax.Array, cfg: ModelConfig,
+           attn_impl: str = "xla") -> jax.Array:
+    """Encoder stack (seamless): frame embeddings (B,S,D) -> (B,S,D)."""
+    h, _ = _run_blocks(params["encoder"], enc_embeds.astype(jnp.dtype(cfg.dtype)),
+                       cfg, angles=_angles_for(cfg, *enc_embeds.shape[:2]),
+                       causal=False, attn_impl=attn_impl)
+    return rmsnorm(params["encoder"]["final_norm"], h, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward_hidden(params: PyTree, batch: Dict[str, jax.Array],
+                   cfg: ModelConfig, attn_impl: str = "xla"):
+    """Returns (final hidden states (B,S,D), aux_loss)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed_tokens(params, tokens)
+    h = _merge_vision(cfg, h, batch.get("vision_embeds"))
+    h = _constrain_batch(h, cfg)
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = encode(params, batch["enc_embeds"], cfg, attn_impl=attn_impl)
+    angles = _angles_for(cfg, b, s)
+    h, aux = _run_blocks(params, h, cfg, angles, causal=True,
+                         enc_out=enc_out, attn_impl=attn_impl)
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps), aux
+
+
+def _unembed(params: PyTree, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = jnp.dot(h, params["unembed"])
+    if cfg.shard_strategy == "megatron":
+        try:
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(BATCH_AXES, None, "model"))
+        except (RuntimeError, ValueError):
+            pass
+    else:
+        logits = _constrain_batch(logits, cfg)
+    return logits
+
+
+def lm_loss(params: PyTree, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            attn_impl: str = "xla"):
+    """Vocab-parallel cross-entropy.  batch: tokens, targets (+modality)."""
+    h, aux = forward_hidden(params, batch, cfg, attn_impl=attn_impl)
+    logits = _unembed(params, h, cfg).astype(jnp.float32)
+    v = cfg.padded_vocab
+    vocab_mask = (jnp.arange(v) < cfg.vocab_size)[None, None, :]
+    logits = jnp.where(vocab_mask, logits, -1e30)
+    targets = batch["targets"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, targets[..., None],
+                                     axis=-1)[..., 0]
+    token_mask = (targets >= 0).astype(jnp.float32)
+    nll = (lse - true_logit) * token_mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(token_mask), 1.0)
+    metrics = {"ce_loss": loss, "aux_loss": aux,
+               "tokens": jnp.sum(token_mask)}
+    return loss + aux, metrics
+
+
+def lm_logits(params: PyTree, batch: Dict[str, jax.Array], cfg: ModelConfig,
+              attn_impl: str = "xla") -> jax.Array:
+    h, _ = forward_hidden(params, batch, cfg, attn_impl=attn_impl)
+    return _unembed(params, h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int,
+                cross_len: int = 0) -> PyTree:
+    """Abstract stacked decode caches: tuple over pattern positions, each a
+    tree with leading n_repeats dim."""
+    out = []
+    for spec in cfg.pattern:
+        layer = blocks.layer_cache_specs(cfg, spec, batch, seq,
+                                         cross_len if cfg.encoder_decoder else 0)
+        out.append(jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_repeats,) + s.shape, s.dtype),
+            layer))
+    return tuple(out)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               cross_len: int = 0) -> PyTree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, seq, cross_len))
+
+
+def decode_step(params: PyTree, caches: PyTree, token: jax.Array, pos,
+                cfg: ModelConfig):
+    """One decode step.  token (B,1) int32; pos scalar int32 (current length).
+
+    Returns (logits (B,1,V), new caches).  Attention caches are ring buffers
+    sequence-sharded over ``model``; SSM/xLSTM states are O(1) per token.
+    """
+    b = token.shape[0]
+    h = _embed_tokens(params, token)
+    angles = _angles_for(cfg, b, 1, positions=pos)
+
+    def body(carry, xs):
+        block_params, block_cache = xs
+        hh, new_cache = blocks.block_decode(block_params, carry, block_cache,
+                                            pos, cfg, angles)
+        return hh, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], caches))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _unembed(params, h, cfg), new_caches
+
+
+def prefill(params: PyTree, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            cache_len: int, attn_impl: str = "xla"):
+    """Run the full prompt, materializing decode caches of capacity cache_len.
+
+    Used by the serving example; the decode dry-run cells take caches as
+    abstract inputs directly.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    enc_out = None
+    cross_len = 0
+    if cfg.encoder_decoder:
+        enc_out = encode(params, batch["enc_embeds"], cfg, attn_impl=attn_impl)
+        cross_len = enc_out.shape[1]
+    caches = init_cache(cfg, b, cache_len, cross_len)
+    if cfg.encoder_decoder:
+        # Precompute cross-attention K/V for every decoder layer.
+        hd = cfg.resolved_head_dim
+        new_caches = []
+        for p_idx in range(len(cfg.pattern)):
+            layer_cache = dict(caches[p_idx])
+            wk = params["blocks"][p_idx]["cross_attn"]["wk"]  # (R, d, kvd)
+            wv = params["blocks"][p_idx]["cross_attn"]["wv"]
+            ck = jnp.einsum("bsd,rde->rbse", enc_out, wk)
+            cv = jnp.einsum("bsd,rde->rbse", enc_out, wv)
+            r = cfg.n_repeats
+            layer_cache["cross_k"] = ck.reshape(r, b, cross_len,
+                                                cfg.n_kv_heads, hd)
+            layer_cache["cross_v"] = cv.reshape(r, b, cross_len,
+                                                cfg.n_kv_heads, hd)
+            new_caches.append(layer_cache)
+        caches = tuple(new_caches)
+
+    # Replay the prompt one token at a time in a scan (cache capacity >= s):
+    # exact, single compiled graph.  (A parallel prefill that rebuilds caches
+    # from the blocked forward is the attn-only fast path; see serving docs.)
+    def step(carry, i):
+        caches_c, h_unused = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+        logits, caches_n = decode_step(params, caches_c, tok, i, cfg)
+        return (caches_n, h_unused), logits[:, 0]
+
+    (caches, _), all_logits = jax.lax.scan(
+        step, (caches, jnp.zeros((b,), jnp.float32)), jnp.arange(s))
+    return all_logits.swapaxes(0, 1), caches

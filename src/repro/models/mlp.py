@@ -1,0 +1,25 @@
+"""Dense SwiGLU MLP (llama-family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, PyTree
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int = 0) -> PyTree:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "mlp"), dt),
+        "wi_up": ParamSpec((d, f), ("embed", "mlp"), dt),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), dt),
+    }
+
+
+def mlp_fwd(params: PyTree, x: jax.Array) -> jax.Array:
+    gate = jnp.dot(x, params["wi_gate"])
+    up = jnp.dot(x, params["wi_up"])
+    return jnp.dot(jax.nn.silu(gate) * up, params["wo"])

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts layer: top-k routing, GShard-style grouped dense dispatch
+with a capacity factor, expert-parallel sharding over the ``model`` mesh axis.
+
+Why grouped dispatch: the dispatch one-hot has shape (groups, group_tokens,
+experts, capacity) with capacity = group_tokens*top_k*cf/experts, so both its
+memory and its einsum FLOPs scale as O(tokens * group_tokens * top_k * cf) —
+*independent of expert count* — and stay a few percent of the expert-FFN FLOPs
+for group_size <= 512 (see EXPERIMENTS.md §Roofline / moe-dispatch note).
+Expert weights are sharded over ``model`` on the expert dim (64/16=4 olmoe,
+128/16=8 qwen3-moe, 16/16=1 jamba per shard); the SPMD partitioner turns the
+dispatch/combine einsums into the expected all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, PyTree
+
+
+def moe_specs(cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "router": ParamSpec((d, e), ("embed", None), dt, init_scale=0.1),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "mlp"), dt),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "mlp"), dt),
+        "wo": ParamSpec((e, f, d), ("experts", "mlp", "embed"), dt),
+    }
+
+
+def _top_k_gating(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """logits (..., E) -> (weights (..., k), indices (..., k)); softmax over top-k."""
+    top_vals, top_idx = jax.lax.top_k(logits, k)
+    weights = jax.nn.softmax(top_vals.astype(jnp.float32), axis=-1)
+    return weights, top_idx
+
+
+def moe_fwd(params: PyTree, x: jax.Array, cfg: ModelConfig):
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    gt = min(cfg.moe_group_size, b * s)
+    tokens = b * s
+    assert tokens % gt == 0, (tokens, gt)
+    g = tokens // gt
+    if gt <= 64:
+        # decode / tiny-batch regime: dropless (cap covers the worst case) so
+        # serving logits are independent of batch grouping
+        cap = gt
+    else:
+        cap = max(1, int(round(gt * k * cfg.capacity_factor / e)))
+
+    xg = x.reshape(g, gt, d)
+    logits = jnp.dot(xg, params["router"]).astype(jnp.float32)  # (g, gt, E)
+    weights, top_idx = _top_k_gating(logits, k)  # (g, gt, k)
+
+    # Load-balancing auxiliary loss (Switch-style): mean prob * token fraction.
+    probs = jax.nn.softmax(logits, axis=-1)
+    density = jnp.mean(jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32),
+                       axis=(0, 1))
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * density_prob)
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # (g, gt, k, E)
+    flat = onehot.reshape(g, gt * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(g, gt, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # (g, gt, k)
+    keep = pos < cap  # capacity dropping
+    weights = weights * keep.astype(weights.dtype)
+
+    # dispatch tensor (g, gt, E, cap)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot.astype(x.dtype), pos_oh)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec",
+                         weights.astype(x.dtype), onehot.astype(x.dtype), pos_oh)
+
+    # tokens -> expert buffers (g, E, cap, D); all-to-all under EP sharding
+    xe = jnp.einsum("gtd,gtec->gecd", xg, dispatch)
+    # expert FFN (SwiGLU), batched over experts
+    gate = jnp.einsum("gecd,edf->gecf", xe, params["wi_gate"])
+    up = jnp.einsum("gecd,edf->gecf", xe, params["wi_up"])
+    ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up, params["wo"])
+    # back to token order
+    out = jnp.einsum("gecd,gtec->gtd", ye, combine)
+    return out.reshape(b, s, d), aux * cfg.router_aux_weight

@@ -1,0 +1,67 @@
+"""Rotary position embeddings: standard RoPE and M-RoPE (Qwen2-VL).
+
+M-RoPE splits the head dimension into (temporal, height, width) sections; text
+tokens use identical positions in all three sections, vision tokens use their
+(t, h, w) grid coordinates.  ``mrope_positions`` builds the (3, B, S) position
+tensor for the assignment's stubbed frontend: ``vision_tokens`` patch embeddings
+occupy positions [0, V) on a (gh, gw) grid, text follows.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions (..., S) -> angles (..., S, head_dim//2)."""
+    freqs = rope_freqs(head_dim, theta)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x (B, S, H, hd); angles (B, S, hd//2) or (S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def mrope_angles(positions_3d: jax.Array, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]) -> jax.Array:
+    """positions_3d (3, B, S) -> angles (B, S, head_dim//2).
+
+    ``sections`` gives per-axis sizes in *half-dim* units, summing to hd//2.
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = rope_freqs(head_dim, theta)  # (hd//2,)
+    # (3, B, S, hd//2)
+    all_angles = positions_3d[..., None].astype(jnp.float32) * freqs
+    parts = []
+    off = 0
+    for axis, sec in enumerate(sections):
+        parts.append(all_angles[axis, :, :, off:off + sec])
+        off += sec
+    return jnp.concatenate(parts, axis=-1)
+
+
+def mrope_positions(batch: int, seq: int, vision_tokens: int,
+                    grid: Tuple[int, int], offset: int = 0) -> jax.Array:
+    """(3, B, S) positions: vision patches on a grid, then text."""
+    gh, gw = grid
+    v = vision_tokens
+    idx = jnp.arange(seq) + offset
+    t_pos = jnp.where(idx < v, 0, idx - v + 1)
+    h_pos = jnp.where(idx < v, (idx % (gh * gw)) // gw, idx - v + 1)
+    w_pos = jnp.where(idx < v, idx % gw, idx - v + 1)
+    pos = jnp.stack([t_pos, h_pos, w_pos])  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))

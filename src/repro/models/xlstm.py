@@ -1,0 +1,207 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory with exponential gating, strictly sequential).
+
+TPU adaptation notes:
+* mLSTM admits a chunkwise-parallel form (linear attention with per-step decay
+  gates): ``lax.scan`` over chunks carrying the (B,H,hd,hd) matrix memory and
+  (B,H,hd) normalizer, intra-chunk handled with (Tc x Tc) MXU matmuls.  We
+  bound the exponential input gate with a softcap instead of carrying the
+  max-stabilizer through the chunk recurrence (f-gate is a sigmoid <= 1, so
+  products only decay); tests validate against the exact sequential recurrence.
+* sLSTM has recurrent (h_{t-1}) gate dependencies -> no parallel form exists
+  (per the paper); we scan over time with the standard m-stabilized update.
+  Its recurrent weights are block-diagonal per head.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, PyTree, softcap
+
+_IGATE_CAP = 10.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> PyTree:
+    d, di = cfg.d_model, cfg.mlstm_inner
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "up": ParamSpec((d, 2 * di), ("embed", "mlstm_inner"), dt),
+        "wq": ParamSpec((di, di), ("mlstm_inner", "mlstm_inner2"), dt),
+        "wk": ParamSpec((di, di), ("mlstm_inner", "mlstm_inner2"), dt),
+        "wv": ParamSpec((di, di), ("mlstm_inner", "mlstm_inner2"), dt),
+        "w_gates": ParamSpec((di, 2 * cfg.n_heads), ("mlstm_inner", None), dt,
+                             init_scale=0.1),
+        "b_gates": ParamSpec((2 * cfg.n_heads,), (None,), jnp.float32,
+                             init="zeros"),
+        "down": ParamSpec((di, d), ("mlstm_inner", "embed"), dt),
+    }
+
+
+def _mlstm_qkv_gates(params: PyTree, x: jax.Array, cfg: ModelConfig):
+    di, h = cfg.mlstm_inner, cfg.n_heads
+    hd = di // h
+    u, z = jnp.split(jnp.dot(x, params["up"]), 2, axis=-1)
+    b, s = u.shape[:2]
+    q = jnp.dot(u, params["wq"]).reshape(b, s, h, hd)
+    k = jnp.dot(u, params["wk"]).reshape(b, s, h, hd) / jnp.sqrt(float(hd))
+    v = jnp.dot(u, params["wv"]).reshape(b, s, h, hd)
+    gates = (jnp.dot(u, params["w_gates"]).astype(jnp.float32)
+             + params["b_gates"][None, None])
+    log_i = softcap(gates[..., :h], _IGATE_CAP)          # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gates[..., h:])           # (B,S,H) <= 0
+    return q, k, v, log_i, log_f, z
+
+
+def mlstm_fwd(params: PyTree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x (B,S,D) -> (B,S,D), chunkwise-parallel mLSTM."""
+    b, s, _ = x.shape
+    h_heads = cfg.n_heads
+    di = cfg.mlstm_inner
+    hd = di // h_heads
+    q, k, v, log_i, log_f, z = _mlstm_qkv_gates(params, x, cfg)
+    chunk = min(cfg.ssm_chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def resh(a):  # (B,S,...) -> (nc,B,chunk,...)
+        return a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    lic, lfc = resh(log_i), resh(log_f)
+
+    def body(carry, inp):
+        c_state, n_state = carry  # (B,H,hd,hd), (B,H,hd)
+        qi, ki, vi, li, lf = inp
+        fcum = jnp.cumsum(lf, axis=1)  # (B,T,H) inclusive
+        ftot = fcum[:, -1]
+        # intra-chunk: weights_ts = exp(fcum_t - fcum_s + li_s) q_t.k_s, s<=t
+        rel = fcum[:, :, None, :] - fcum[:, None, :, :] + li[:, None, :, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        rel = jnp.where(mask[None, :, :, None], rel, -jnp.inf)
+        decay = jnp.exp(rel)  # (B,T,T,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qi, ki).astype(jnp.float32) * decay
+        h_intra = jnp.einsum("btsh,bshd->bthd", scores.astype(vi.dtype), vi)
+        n_intra = jnp.einsum("btsh,bshd->bthd", decay.astype(ki.dtype), ki)
+        # inter-chunk from carried state
+        qf = qi * jnp.exp(fcum).astype(qi.dtype)[..., None]
+        h_inter = jnp.einsum("bthd,bhde->bthe", qf, c_state.astype(qi.dtype))
+        n_inter = jnp.einsum("bthd,bhd->bth", qf, n_state.astype(qi.dtype))
+        # normalizer: max(|n.q|, 1) with n_t = intra sum + decayed carry
+        n_dot_q = (jnp.einsum("bthd,bthd->bth", n_intra.astype(jnp.float32),
+                              qi.astype(jnp.float32))
+                   + n_inter.astype(jnp.float32))
+        denom = jnp.maximum(jnp.abs(n_dot_q), 1.0)[..., None]
+        h_out = (h_intra.astype(jnp.float32) + h_inter.astype(jnp.float32)) / denom
+        # state update to end of chunk
+        wk = jnp.exp(ftot[:, None, :] - fcum + li).astype(ki.dtype)  # (B,T,H)
+        c_new = (c_state * jnp.exp(ftot).astype(jnp.float32)[..., None, None]
+                 + jnp.einsum("bthd,bthe->bhde",
+                              (ki * wk[..., None]), vi).astype(jnp.float32))
+        n_new = (n_state * jnp.exp(ftot).astype(jnp.float32)[..., None]
+                 + jnp.sum(ki * wk[..., None], axis=1).astype(jnp.float32))
+        return (c_new, n_new), h_out.astype(x.dtype)
+
+    c0 = jnp.zeros((b, h_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h_heads, hd), jnp.float32)
+    _, hs = jax.lax.scan(body, (c0, n0),
+                         (qc, kc, vc, lic, lfc))
+    out = hs.swapaxes(0, 1).reshape(b, s, di)
+    out = out * jax.nn.silu(z)
+    return jnp.dot(out, params["down"])
+
+
+def mlstm_decode(params: PyTree, x: jax.Array, c_state, n_state,
+                 cfg: ModelConfig):
+    """One-token mLSTM step. c (B,H,hd,hd) n (B,H,hd)."""
+    b = x.shape[0]
+    h_heads = cfg.n_heads
+    di = cfg.mlstm_inner
+    hd = di // h_heads
+    q, k, v, log_i, log_f, z = _mlstm_qkv_gates(params, x, cfg)
+    i_g = jnp.exp(log_i[:, 0])[..., None]  # (B,H,1)
+    f_g = jnp.exp(log_f[:, 0])[..., None]
+    c_new = (c_state * f_g[..., None]
+             + jnp.einsum("bhd,bhe->bhde", k[:, 0] * i_g.astype(k.dtype),
+                          v[:, 0]).astype(jnp.float32))
+    n_new = n_state * f_g + (k[:, 0] * i_g.astype(k.dtype)).astype(jnp.float32)
+    h_num = jnp.einsum("bhd,bhde->bhe", q[:, 0].astype(jnp.float32), c_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh",
+                                           n_new, q[:, 0].astype(jnp.float32))), 1.0)
+    h_out = (h_num / denom[..., None]).reshape(b, 1, di).astype(x.dtype)
+    out = h_out * jax.nn.silu(z)
+    return jnp.dot(out, params["down"]), c_new, n_new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    p = int(d * cfg.xlstm_slstm_proj)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_in": ParamSpec((d, 4 * d), ("embed", None), dt),   # z,i,f,o inputs
+        "r": ParamSpec((4, h, hd, hd), (None, None, None, None), dt,
+                       init_scale=0.5),                        # block-diag recurrent
+        "bias": ParamSpec((4 * d,), (None,), jnp.float32, init="zeros"),
+        "up": ParamSpec((d, 2 * p), ("embed", "mlp"), dt),
+        "down": ParamSpec((p, d), ("mlp", "embed"), dt),
+    }
+
+
+def _slstm_step(params: PyTree, cfg: ModelConfig, carry, x_t):
+    """carry: (c,n,m,h) each (B,D) f32; x_t: precomputed W_in x (B,4D)."""
+    c, n, m, h = carry
+    d = cfg.d_model
+    hh = cfg.n_heads
+    hd = d // hh
+    b = c.shape[0]
+    hr = h.reshape(b, hh, hd)
+    rec = jnp.einsum("bhd,ghde->bghe", hr.astype(params["r"].dtype),
+                     params["r"]).reshape(b, 4 * d)
+    pre = (x_t + rec.astype(jnp.float32)
+           + params["bias"][None]).astype(jnp.float32)
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_i = softcap(i_pre, _IGATE_CAP)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_fwd(params: PyTree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x (B,S,D) -> (B,S,D): sequential scan + post up/down projection."""
+    b, s, d = x.shape
+    x_in = jnp.dot(x, params["w_in"]).astype(jnp.float32)  # (B,S,4D)
+    carry0 = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
+    _, hs = jax.lax.scan(lambda c, xt: _slstm_step(params, cfg, c, xt),
+                         carry0, x_in.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,D)
+    u, g = jnp.split(jnp.dot(h, params["up"]), 2, axis=-1)
+    return jnp.dot(u * jax.nn.gelu(g), params["down"])
+
+
+def slstm_decode(params: PyTree, x: jax.Array, state, cfg: ModelConfig):
+    """One-token sLSTM step; state = (c,n,m,h) each (B,D)."""
+    x_in = jnp.dot(x[:, 0], params["w_in"]).astype(jnp.float32)
+    state_new, h = _slstm_step(params, cfg, state, x_in)
+    h = h[:, None, :].astype(x.dtype)
+    u, g = jnp.split(jnp.dot(h, params["up"]), 2, axis=-1)
+    return jnp.dot(u * jax.nn.gelu(g), params["down"]), state_new

@@ -1,0 +1,208 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / TP / EP / SP / FSDP).
+
+Every ParamSpec carries logical axis names; these rules translate them into
+``PartitionSpec``s for a given config + role:
+
+* TP: flattened head/ffn/expert/inner dims -> ``model``.
+* EP: MoE expert dim -> ``model``.
+* DP: batch -> ``("pod","data")`` (pod folds into data parallelism).
+* FSDP: when ``cfg.fsdp`` (jamba-398B) or when serving a model whose
+  model-sharded bf16 weights exceed the per-device budget, the ``embed``
+  (d_model) dim additionally shards over ``data`` (ZeRO-3 semantics: XLA
+  all-gathers per layer inside the scan).
+* SP (decode): KV caches shard the *sequence* dim over ``model``
+  (flash-decoding); SSM/xLSTM state shards channels over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, PyTree, is_spec_leaf
+
+HBM_BYTES_BUDGET = 12 * 2 ** 30  # leave headroom of 16 GB HBM for activations
+
+
+def axis_rules(cfg: ModelConfig, mesh: Mesh, fsdp: Optional[bool] = None
+               ) -> Dict[str, Optional[str]]:
+    use_fsdp = cfg.fsdp if fsdp is None else fsdp
+    if cfg.shard_strategy in ("pure_dp", "seq_dp", "ep_seq"):
+        # weights replicated: all parallelism comes from the batch/sequence
+        # dims (ZeRO-1 shards the *optimizer state* separately via
+        # opt_pspecs).  ep_seq keeps ONLY the expert dim sharded (EP): the
+        # MoE weights are the bulk of the parameters; everything else is
+        # small enough to replicate, and attention goes sequence-parallel.
+        rules = {k: None for k in ("vocab", "heads", "kv_heads", "mlp",
+                                   "experts", "mamba_inner", "mlstm_inner",
+                                   "mlstm_inner2", "embed", "layers", None)}
+        if cfg.shard_strategy == "ep_seq":
+            rules["experts"] = "model"
+        return rules
+    return {
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "mamba_inner": "model",
+        "mlstm_inner": "model",
+        "mlstm_inner2": None,
+        "embed": (tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+                  if use_fsdp and "data" in mesh.axis_names else None),
+        "layers": None,
+        None: None,
+    }
+
+
+def opt_pspecs(specs: PyTree, cfg: ModelConfig, mesh: Mesh) -> PyTree:
+    """Optimizer-moment shardings.  megatron: same as params.  pure_dp:
+    ZeRO-1 — shard each moment over 'model' on its largest divisible dim."""
+    if cfg.shard_strategy not in ("pure_dp", "seq_dp", "ep_seq"):
+        return param_pspecs(specs, cfg, mesh)
+    m = mesh.shape.get("model", 1)
+
+    def one(s: ParamSpec) -> P:
+        axes = [None] * len(s.shape)
+        dims = sorted(range(len(s.shape)), key=lambda i: -s.shape[i])
+        for i in dims:
+            if s.shape[i] % m == 0 and s.shape[i] >= m:
+                axes[i] = "model"
+                break
+        return P(*axes)
+
+    return jax.tree.map(one, specs, is_leaf=is_spec_leaf)
+
+
+def _axis_size(mesh: Mesh, mesh_axis) -> int:
+    if isinstance(mesh_axis, tuple):
+        n = 1
+        for a in mesh_axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[mesh_axis]
+
+
+def _pspec_for(spec: ParamSpec, rules: Dict[str, Optional[str]],
+               mesh: Mesh) -> P:
+    axes = []
+    used = set()  # each mesh axis may appear at most once per spec
+    for dim, logical in zip(spec.shape, spec.logical_axes):
+        mesh_axis = rules.get(logical)
+        members = (mesh_axis if isinstance(mesh_axis, tuple)
+                   else (mesh_axis,)) if mesh_axis else ()
+        if (mesh_axis is not None and not (set(members) & used)
+                and dim % _axis_size(mesh, mesh_axis) == 0):
+            axes.append(mesh_axis)
+            used.update(members)
+        else:
+            axes.append(None)
+    return P(*axes)
+
+
+def param_pspecs(specs: PyTree, cfg: ModelConfig, mesh: Mesh,
+                 fsdp: Optional[bool] = None) -> PyTree:
+    rules = axis_rules(cfg, mesh, fsdp)
+    return jax.tree.map(lambda s: _pspec_for(s, rules, mesh), specs,
+                        is_leaf=is_spec_leaf)
+
+
+def param_shardings(specs: PyTree, cfg: ModelConfig, mesh: Mesh,
+                    fsdp: Optional[bool] = None) -> PyTree:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        param_pspecs(specs, cfg, mesh, fsdp))
+
+
+def serve_needs_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """Shard serving weights over data too when model-only TP does not fit."""
+    bytes_per_dev = (cfg.param_count() * jnp.dtype(cfg.param_dtype).itemsize
+                     / mesh.shape.get("model", 1))
+    return bytes_per_dev > HBM_BYTES_BUDGET
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh, global_batch: int, extra_dims: int = 1,
+                strategy: str = "megatron") -> P:
+    axes = batch_axes(mesh)
+    if strategy == "pure_dp" and "model" in mesh.axis_names:
+        wide = axes + ("model",)
+        n = 1
+        for a in wide:
+            n *= mesh.shape[a]
+        if global_batch % n == 0:
+            return P(wide, *([None] * extra_dims))
+        # fall through to the narrower batch axes
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if axes and global_batch % n == 0:
+        return P(axes, *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))
+
+
+# ---------------------------------------------------------------------------
+# Decode cache shardings (SP)
+# ---------------------------------------------------------------------------
+
+_CACHE_SEQ_FIELDS = {"k", "v", "cross_k", "cross_v"}  # (R, B, S, Hk, hd)
+
+
+def cache_pspecs(cache_specs: PyTree, cfg: ModelConfig, mesh: Mesh,
+                 global_batch: int) -> PyTree:
+    """Shard attention caches (R,B,S,Hk,hd): B over data, S over model; SSM and
+    xLSTM channel states over model; long-context batch=1 shards S over both.
+    """
+    d_axes = batch_axes(mesh)
+    dsize = 1
+    for a in d_axes:
+        dsize *= mesh.shape[a]
+    b_ok = d_axes and global_batch % dsize == 0
+    msize = mesh.shape.get("model", 1)
+
+    def one(path, s: jax.ShapeDtypeStruct):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = s.shape
+        if name in ("ring_k", "ring_v"):
+            # recent-token ring (two-tier decode): batch over data; head_dim
+            # over model where divisible (writes stay local; the score
+            # contraction psums a tiny (B,H,1,W) tensor)
+            axes = [None] * len(shape)
+            if b_ok:
+                axes[1] = d_axes
+            if shape[-1] % msize == 0:
+                axes[-1] = "model"
+            return P(*axes)
+        if name in _CACHE_SEQ_FIELDS:
+            seq = shape[2]
+            if b_ok:
+                seq_axis = "model" if seq % msize == 0 else None
+                return P(None, d_axes, seq_axis, None, None)
+            # batch=1 long-context: sequence over every axis we have
+            all_ax = tuple(d_axes) + ("model",)
+            if seq % (dsize * msize) == 0:
+                return P(None, None, all_ax, None, None)
+            return P(None, None, "model" if seq % msize == 0 else None,
+                     None, None)
+        # SSM / xLSTM states: channel dims over model where divisible
+        axes = [None] * len(shape)
+        if b_ok:
+            axes[1] = d_axes
+        for i in range(2, len(shape)):
+            if shape[i] % msize == 0 and "model" not in axes:
+                axes[i] = "model"
+                break
+        return P(*axes)
+
+    return jax.tree.map_with_path(one, cache_specs)
+
+
+def cache_shardings(cache_specs: PyTree, cfg: ModelConfig, mesh: Mesh,
+                    global_batch: int) -> PyTree:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        cache_pspecs(cache_specs, cfg, mesh, global_batch))

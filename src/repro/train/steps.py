@@ -1,0 +1,92 @@
+"""jit-able train / serve steps.
+
+``make_train_step``: loss -> grads -> (optional int8-compressed DP all-reduce)
+-> AdamW.  ``make_serve_step``: one-token decode over sharded caches.  Both are
+pure functions of (params, state, batch) so they AOT-lower with
+ShapeDtypeStructs for the multi-pod dry-run and run identically on real data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.common import PyTree
+from repro.optim.adamw import OptimizerConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt: OptimizerConfig,
+                    attn_impl: str = "xla",
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` accumulates gradients over sequential micro-batches
+    (splitting the leading batch dim) before the optimizer update — the
+    standard activation-memory lever.
+    """
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, batch, cfg, attn_impl=attn_impl)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+        grads = jax.tree.map(lambda g: (g / microbatches), gsum)
+        loss = loss_sum / microbatches
+        return loss, {"ce_loss": loss}, grads
+
+    def train_step(params: PyTree, opt_state: PyTree,
+                   batch: Dict[str, jax.Array]):
+        if microbatches > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, attn_impl: str = "xla") -> Callable:
+    """Forward-only logits over a full prompt (the inference-prefill cell)."""
+
+    def prefill_step(params: PyTree, batch: Dict[str, jax.Array]):
+        return lm.lm_logits(params, batch, cfg, attn_impl=attn_impl)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One-token decode: (params, caches, token, pos) -> (logits, caches)."""
+
+    def serve_step(params: PyTree, caches: PyTree, token: jax.Array,
+                   pos: jax.Array):
+        return lm.decode_step(params, caches, token, pos, cfg)
+
+    return serve_step

@@ -1,0 +1,8 @@
+import os
+import pathlib
+import sys
+
+# Tests see the real device count (1 CPU device); only the dry-run forces 512.
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

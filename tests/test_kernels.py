@@ -1,0 +1,71 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp refs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.distance_topk.ops import distance_topk
+from repro.kernels.distance_topk.ref import distance_topk_ref
+from repro.kernels.fpf_update.ops import fpf_update
+from repro.kernels.fpf_update.ref import fpf_update_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("n,c,d,k", [
+    (256, 128, 64, 8), (512, 300, 128, 16), (100, 37, 32, 5), (128, 8, 16, 8),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_distance_topk_sweep(n, c, d, k, dtype):
+    rng = np.random.default_rng(n + c)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)).astype(dtype)
+    r = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32)).astype(dtype)
+    d_ref, _ = distance_topk_ref(x, r, k)
+    d_k, i_k = distance_topk(x, r, k, impl="pallas", interpret=True,
+                             block_n=128, block_c=128)
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref),
+                               rtol=tol, atol=tol)
+    # ids must reproduce the distances (ties may reorder)
+    xd = np.asarray(x, np.float32)
+    rd = np.asarray(r, np.float32)
+    d_from_ids = ((xd[:, None, :] - rd[np.asarray(i_k)]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.sort(d_from_ids, 1),
+                               np.sort(np.asarray(d_ref), 1),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d", [(512, 64), (1000, 128), (130, 32)])
+def test_fpf_update_sweep(n, d):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    rep = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    m0 = jnp.asarray(rng.uniform(0.5, 8, size=(n,)).astype(np.float32))
+    nm_r, i_r, v_r = fpf_update_ref(x, rep, m0)
+    nm_k, i_k, v_k = fpf_update(x, rep, m0, impl="pallas", interpret=True,
+                                block_n=128)
+    np.testing.assert_allclose(np.asarray(nm_k), np.asarray(nm_r), rtol=1e-5)
+    assert abs(float(v_k) - float(v_r)) < 1e-4
+    assert float(nm_r[int(i_k)]) == pytest.approx(float(v_r), abs=1e-4)
+
+
+@pytest.mark.parametrize("b,s,skv,h,hk,hd,causal,window", [
+    (2, 128, 128, 8, 4, 64, True, 0),
+    (1, 128, 128, 4, 4, 128, True, 64),
+    (2, 96, 96, 8, 2, 80, True, 0),
+    (1, 64, 192, 4, 2, 64, False, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, skv, h, hk, hd, causal, window, dtype):
+    rng = np.random.default_rng(s + h)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32)).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(b, skv, hk, hd)).astype(np.float32)).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(b, skv, hk, hd)).astype(np.float32)).astype(dtype)
+    o_ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    o_k = flash_attention(q, k, v, causal=causal, window=window,
+                          impl="pallas", interpret=True,
+                          block_q=64, block_k=64)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,193 @@
+"""Cross-path consistency: decode replay == parallel forward; chunked SSM /
+xLSTM forms == their sequential recurrences; blocked attention == full
+softmax.  These pin the serving path to the training path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention, lm, mamba, xlstm
+from repro.models.common import init_params
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen3-1.7b", "xlstm-350m",
+                                  "jamba-1.5-large-398b", "olmoe-1b-7b"])
+def test_decode_replay_matches_parallel_forward(arch):
+    cfg = get_config(arch).smoke()
+    b, s = 2, 16
+    params = lm.init_model(cfg, jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    logits_par = lm.lm_logits(params, batch, cfg)
+
+    caches = lm.init_cache(cfg, b, s)
+    logs = []
+    for t in range(s):
+        lg, caches = lm.decode_step(params, caches, tokens[:, t:t + 1],
+                                    jnp.int32(t), cfg)
+        logs.append(lg[:, 0])
+    logits_seq = jnp.stack(logs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_seq),
+                               np.asarray(logits_par), rtol=2e-2, atol=2e-2)
+
+
+def test_blocked_attention_matches_full_softmax():
+    cfg = get_config("llama3.2-1b").smoke()
+    b, s, h, hd = 2, 64, cfg.n_heads, cfg.resolved_head_dim
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.n_kv_heads, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, cfg.n_kv_heads, hd))
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    out_blocked = attention.blocked_attention(q, k, v, cfg, causal=True)
+    out_full = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out_blocked), np.asarray(out_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blocked_attention_sliding_window():
+    cfg = get_config("h2o-danube-3-4b").smoke()
+    b, s, h, hd = 1, 128, cfg.n_heads, cfg.resolved_head_dim
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.n_kv_heads, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, cfg.n_kv_heads, hd))
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    w = cfg.sliding_window
+    assert w and w < s
+    out_b = attention.blocked_attention(q, k, v, cfg, causal=True, window=w)
+    out_f = flash_attention_ref(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_f),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_chunked_equals_stepwise():
+    cfg = get_config("jamba-1.5-large-398b").smoke()
+    b, s = 2, 32
+    params = init_params(mamba.mamba_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_par = mamba.mamba_fwd(params, x, cfg)
+    conv = jnp.zeros((b, cfg.ssm_conv_width - 1, cfg.d_inner))
+    h = jnp.zeros((b, cfg.d_inner, cfg.ssm_state_dim))
+    ys = []
+    for t in range(s):
+        y, conv, h = mamba.mamba_decode(params, x[:, t:t + 1], conv, h, cfg)
+        ys.append(y[:, 0])
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_par),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_chunked_equals_stepwise():
+    cfg = get_config("xlstm-350m").smoke()
+    b, s = 2, 32
+    params = init_params(xlstm.mlstm_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_par = xlstm.mlstm_fwd(params, x, cfg)
+    hh = cfg.n_heads
+    hd = cfg.mlstm_inner // hh
+    c = jnp.zeros((b, hh, hd, hd))
+    n = jnp.zeros((b, hh, hd))
+    ys = []
+    for t in range(s):
+        y, c, n = xlstm.mlstm_decode(params, x[:, t:t + 1], c, n, cfg)
+        ys.append(y[:, 0])
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_par),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_slstm_fwd_equals_stepwise():
+    cfg = get_config("xlstm-350m").smoke()
+    b, s = 2, 16
+    params = init_params(xlstm.slstm_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_par = xlstm.slstm_fwd(params, x, cfg)
+    state = tuple(jnp.zeros((b, cfg.d_model)) for _ in range(4))
+    ys = []
+    for t in range(s):
+        y, state = xlstm.slstm_decode(params, x[:, t:t + 1], state, cfg)
+        ys.append(y[:, 0])
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_par),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_and_aux():
+    from repro.models import moe
+    cfg = get_config("olmoe-1b-7b").smoke()
+    params = init_params(moe.moe_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out, aux = moe.moe_fwd(params, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(aux)) and float(aux) >= 0
+
+
+def test_two_tier_decode_matches_plain():
+    """Two-tier (frozen main + ring) decode == plain decode: the prompt is
+    replayed into the MAIN cache with the plain path, then decode steps use
+    the ring for new tokens (§Perf decode hillclimb)."""
+    import dataclasses
+    cfg = get_config("phi3-medium-14b").smoke()
+    b, s, extra = 2, 16, 6
+    cfg_ring = dataclasses.replace(cfg, decode_ring=8)
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s + extra), 0,
+                                cfg.vocab_size)
+    # plain reference over prompt + decode
+    caches_a = lm.init_cache(cfg, b, s + extra)
+    for t in range(s + extra):
+        logits_a, caches_a = lm.decode_step(params, caches_a,
+                                            tokens[:, t:t + 1],
+                                            jnp.int32(t), cfg)
+    # two-tier: prompt into main (plain path, capacity exactly s), then ring
+    caches_m = lm.init_cache(cfg, b, s)
+    for t in range(s):
+        _, caches_m = lm.decode_step(params, caches_m, tokens[:, t:t + 1],
+                                     jnp.int32(t), cfg)
+    caches_r = lm.init_cache(cfg_ring, b, s)
+    caches_r = jax.tree.map(lambda r, m: r if r.shape not in
+                            [x.shape for x in jax.tree.leaves(caches_m)]
+                            else m, caches_r, caches_r)
+    # graft main k/v from the plain prompt caches
+    grafted = []
+    for pos_i in range(len(cfg.pattern)):
+        layer = dict(caches_r[pos_i])
+        layer["k"] = caches_m[pos_i]["k"]
+        layer["v"] = caches_m[pos_i]["v"]
+        grafted.append(layer)
+    caches_b = tuple(grafted)
+    for t in range(s, s + extra):
+        logits_b, caches_b = lm.decode_step(params, caches_b,
+                                            tokens[:, t:t + 1],
+                                            jnp.int32(t), cfg_ring)
+    np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_a),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_swa_decode_replay_matches_parallel():
+    """Sliding-window decode masking where the window actually binds
+    (seq > window): replay == parallel forward for h2o-danube."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("h2o-danube-3-4b").smoke(),
+                              sliding_window=8, attn_block_q=8,
+                              attn_block_k=8)
+    b, s = 2, 24
+    params = lm.init_model(cfg, jax.random.PRNGKey(3))
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0,
+                                cfg.vocab_size)
+    logits_par = lm.lm_logits(params, {"tokens": tokens}, cfg)
+    caches = lm.init_cache(cfg, b, s)
+    logs = []
+    for t in range(s):
+        lg, caches = lm.decode_step(params, caches, tokens[:, t:t + 1],
+                                    jnp.int32(t), cfg)
+        logs.append(lg[:, 0])
+    logits_seq = jnp.stack(logs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_seq),
+                               np.asarray(logits_par), rtol=2e-2, atol=2e-2)

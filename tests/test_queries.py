@@ -1,0 +1,107 @@
+"""Query-processing algorithm tests: EB aggregation coverage, SUPG recall
+guarantees, limit-query behavior."""
+import numpy as np
+import pytest
+
+from repro.core.queries.aggregation import (aggregate_control_variates,
+                                            eb_half_width)
+from repro.core.queries.limit import limit_query
+from repro.core.queries.selection import (achieved_recall,
+                                          false_positive_rate,
+                                          supg_recall_target)
+
+
+def _toy(n=5000, rho=0.9, seed=0):
+    rng = np.random.default_rng(seed)
+    truth = rng.poisson(1.5, size=n).astype(float)
+    noise = rng.normal(0, 1, size=n)
+    proxy = rho * (truth - truth.mean()) / truth.std() + \
+        np.sqrt(1 - rho ** 2) * noise
+    proxy = proxy * truth.std() + truth.mean()
+    return truth, proxy
+
+
+def test_eb_aggregation_within_error():
+    truth, proxy = _toy()
+    res = aggregate_control_variates(
+        proxy, lambda ids: truth[ids], err=0.05, delta=0.05, seed=1)
+    assert abs(res.estimate - truth.mean()) <= 0.1  # CI is conservative
+    assert res.n_invocations < len(truth)
+
+
+def test_cv_beats_random_sampling_invocations():
+    truth, proxy = _toy(rho=0.95)
+    res_cv = aggregate_control_variates(
+        proxy, lambda ids: truth[ids], err=0.05, seed=2)
+    res_rnd = aggregate_control_variates(
+        proxy, lambda ids: truth[ids], err=0.05, seed=2, use_cv=False)
+    assert res_cv.n_invocations < res_rnd.n_invocations
+
+
+def test_better_proxy_fewer_invocations():
+    truth, good = _toy(rho=0.97, seed=3)
+    _, bad = _toy(rho=0.3, seed=3)
+    n_good = aggregate_control_variates(
+        good, lambda ids: truth[ids], err=0.05, seed=4).n_invocations
+    n_bad = aggregate_control_variates(
+        bad, lambda ids: truth[ids], err=0.05, seed=4).n_invocations
+    assert n_good < n_bad
+
+
+def test_eb_half_width_shrinks():
+    assert eb_half_width(1.0, 4.0, 1000, 0.05) < eb_half_width(1.0, 4.0, 100, 0.05)
+
+
+def test_supg_meets_recall_target_whp():
+    rng = np.random.default_rng(0)
+    n = 4000
+    truth = rng.uniform(size=n) < 0.15
+    proxy = np.clip(truth * 0.7 + rng.uniform(0, 0.45, size=n), 0, 1)
+    hits = 0
+    trials = 10
+    for s in range(trials):
+        r = supg_recall_target(proxy, lambda ids: truth[ids].astype(float),
+                               budget=500, recall_target=0.9, delta=0.05,
+                               seed=s)
+        if achieved_recall(r.selected, truth) >= 0.9:
+            hits += 1
+    assert hits >= 8  # 90% target at 95% confidence; allow MC slack
+
+
+def test_supg_better_proxy_lower_fpr():
+    rng = np.random.default_rng(1)
+    n = 4000
+    truth = rng.uniform(size=n) < 0.15
+    sharp = np.clip(truth * 0.9 + rng.uniform(0, 0.1, size=n), 0, 1)
+    blurry = np.clip(truth * 0.3 + rng.uniform(0, 0.7, size=n), 0, 1)
+    f_sharp = np.mean([false_positive_rate(
+        supg_recall_target(sharp, lambda i: truth[i].astype(float),
+                           budget=500, seed=s).selected, truth)
+        for s in range(5)])
+    f_blurry = np.mean([false_positive_rate(
+        supg_recall_target(blurry, lambda i: truth[i].astype(float),
+                           budget=500, seed=s).selected, truth)
+        for s in range(5)])
+    assert f_sharp < f_blurry
+
+
+def test_limit_query_exactness():
+    rng = np.random.default_rng(2)
+    n = 2000
+    truth = np.zeros(n)
+    truth[rng.choice(n, 20, replace=False)] = 1.0
+    perfect = truth + rng.normal(0, 1e-6, n)
+    res = limit_query(perfect, lambda ids: truth[ids], k_results=10, batch=4)
+    assert len(res.found_ids) == 10
+    assert res.n_invocations <= 12  # near-oracle ordering
+    assert all(truth[res.found_ids] == 1.0)
+
+
+def test_limit_query_bad_proxy_costs_more():
+    rng = np.random.default_rng(3)
+    n = 2000
+    truth = np.zeros(n)
+    truth[rng.choice(n, 20, replace=False)] = 1.0
+    random_proxy = rng.uniform(size=n)
+    res = limit_query(random_proxy, lambda ids: truth[ids], k_results=10)
+    assert res.n_invocations > 200

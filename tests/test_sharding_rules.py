@@ -1,0 +1,108 @@
+"""Sharding-rule invariants (run on 1 device; full-mesh coherence is proven by
+the 512-device dry-run, experiments/dryrun/)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.models.common import is_spec_leaf
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Shape-only stand-in for the 16x16 production mesh (no devices)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mesh", [MESH, MESH3], ids=["single", "multi"])
+def test_param_pspecs_no_duplicates_and_divisible(arch, mesh):
+    cfg = get_config(arch)
+    specs = lm.model_specs(cfg)
+    pspecs = shd.param_pspecs(specs, cfg, mesh)
+    flat_s = jax.tree.leaves(specs, is_leaf=is_spec_leaf)
+    flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    def size_of(axis):
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[axis]
+
+    def members(axis):
+        return axis if isinstance(axis, tuple) else (axis,)
+
+    for s, p in zip(flat_s, flat_p):
+        named = [m for a in p if a is not None for m in members(a)]
+        assert len(named) == len(set(named)), (s, p)
+        for dim, axis in zip(s.shape, p):
+            if axis is not None:
+                assert dim % size_of(axis) == 0, (s.shape, p)
+
+
+@pytest.mark.parametrize("arch", ["jamba-1.5-large-398b", "qwen3-moe-30b-a3b"])
+def test_big_models_are_tp_sharded(arch):
+    cfg = get_config(arch)
+    specs = lm.model_specs(cfg)
+    pspecs = shd.param_pspecs(specs, cfg, mesh=MESH)
+    flat_s = jax.tree.leaves(specs, is_leaf=is_spec_leaf)
+    flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    # every big weight matrix must be sharded over 'model'
+    for s, p in zip(flat_s, flat_p):
+        n = 1
+        for d in s.shape:
+            n *= d
+        if n >= 2 ** 24:
+            assert "model" in [a for a in p if a is not None], (s.shape, p)
+
+
+def test_moe_experts_on_model_axis():
+    cfg = get_config("olmoe-1b-7b")
+    specs = lm.model_specs(cfg)
+    pspecs = shd.param_pspecs(specs, cfg, mesh=MESH)
+    moe_spec = pspecs["blocks"][0]["moe"]["wi_gate"]  # (L, E, d, f)
+    assert moe_spec[1] == "model"
+
+
+def test_fsdp_adds_data_axis():
+    cfg = get_config("jamba-1.5-large-398b")
+    assert cfg.fsdp
+    specs = lm.model_specs(cfg)
+    pspecs = shd.param_pspecs(specs, cfg, mesh=MESH)
+    attn = pspecs["blocks"][3]["attn"]["wq"]  # (L, d, qd)
+    assert attn[1] in ("data", ("data",)) and attn[2] == "model"
+
+
+def test_cache_specs_sequence_sharded():
+    cfg = get_config("llama3.2-1b")
+    cspecs = lm.cache_specs(cfg, batch=128, seq=32768)
+    pspecs = shd.cache_pspecs(cspecs, cfg, MESH, global_batch=128)
+    k_spec = pspecs[0]["k"]  # (R, B, S, Hk, hd)
+    assert k_spec[1] == ("data",) or k_spec[1] == "data"
+    assert k_spec[2] == "model"
+
+
+def test_cache_specs_long_context_batch1():
+    cfg = get_config("h2o-danube-3-4b")
+    cspecs = lm.cache_specs(cfg, batch=1, seq=524288)
+    pspecs = shd.cache_pspecs(cspecs, cfg, MESH, global_batch=1)
+    k_spec = pspecs[0]["k"]
+    # batch=1: sequence sharded over every available axis
+    assert k_spec[2] == ("data", "model")
+
+
+def test_batch_pspec_fallback_to_replicated():
+    assert shd.batch_pspec(MESH, 1) == P(None, None)
+    assert shd.batch_pspec(MESH, 256) == P(("data",), None)
+    assert shd.batch_pspec(MESH3, 256) == P(("pod", "data"), None)

@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests for the TASTI system (paper §6 in miniature):
+index construction cost structure, all three query types, cracking, and the
+task-agnostic reuse property."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import TastiConfig, build_tasti
+from repro.core.queries.aggregation import aggregate_control_variates
+from repro.core.queries.limit import limit_query
+from repro.core.queries.selection import (achieved_recall,
+                                          false_positive_rate,
+                                          supg_recall_target)
+from repro.core.schema import make_workload
+from repro.core.triplet import TripletConfig
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return make_workload("night-street", n_frames=4000)
+
+
+@pytest.fixture(scope="module")
+def tasti(wl):
+    cfg = TastiConfig(n_train=250, n_reps=500, k=4,
+                      triplet=TripletConfig(steps=250, batch=128),
+                      pretrain_steps=80)
+    return build_tasti(wl, cfg, variant="T")
+
+
+def test_construction_cost_model(tasti):
+    cost = tasti.index.cost
+    assert cost.target_invocations == 250 + 500
+    bd = cost.breakdown()
+    # target DNN dominates construction (paper fig. 2 structure)
+    assert bd["target_dnn_s"] > 10 * (bd["embedding_s"] + bd["distance_s"])
+
+
+def test_aggregation_query(wl, tasti):
+    truth = wl.counts.astype(float)
+    proxy = tasti.proxy_scores(wl.score_count)
+    rho2 = np.corrcoef(proxy, truth)[0, 1] ** 2
+    assert rho2 > 0.8  # paper: 0.91 on night-street
+    res = aggregate_control_variates(proxy, tasti.oracle(wl.score_count),
+                                     err=0.05, seed=0)
+    assert abs(res.estimate - truth.mean()) < 0.15
+    res_rand = aggregate_control_variates(proxy, tasti.oracle(wl.score_count),
+                                          err=0.05, seed=0, use_cv=False)
+    assert res.n_invocations < res_rand.n_invocations
+
+
+def test_supg_selection_query(wl, tasti):
+    truth = wl.counts > 0
+    proxy = np.clip(tasti.proxy_scores(wl.score_has_object), 0, 1)
+    r = supg_recall_target(proxy, tasti.oracle(wl.score_has_object),
+                           budget=250, recall_target=0.9, seed=0)
+    assert achieved_recall(r.selected, truth) >= 0.85  # one MC draw
+    assert false_positive_rate(r.selected, truth) < 0.3
+
+
+def test_limit_query_rare_events(wl, tasti):
+    proxy = tasti.proxy_scores(wl.score_rare, mode="top1")
+    res = limit_query(proxy, tasti.oracle(wl.score_rare), k_results=5)
+    rare_total = int((wl.counts >= wl.rare_count).sum())
+    assert len(res.found_ids) == min(5, rare_total)
+    # far fewer invocations than scanning: the paper's headline win
+    assert res.n_invocations < 0.1 * len(wl.counts)
+
+
+def test_cracking_improves_index(wl, tasti):
+    idx_before = tasti.index.max_intra_cluster()
+    # crack with the records farthest from their representatives
+    far = np.argsort(-tasti.index.topk_d2[:, 0])[:50]
+    tasti.crack_with(far)
+    assert tasti.index.max_intra_cluster() < idx_before
+    truth = wl.counts.astype(float)
+    proxy = tasti.proxy_scores(wl.score_count)
+    assert np.corrcoef(proxy, truth)[0, 1] ** 2 > 0.8
+
+
+def test_task_agnostic_reuse(wl, tasti):
+    """One index serves all query types (the paper's core claim): no extra
+    target-DNN invocations between count/predicate/position/rare queries."""
+    inv_before = tasti.index.cost.target_invocations
+    _ = tasti.proxy_scores(wl.score_count)
+    _ = tasti.proxy_scores(wl.score_has_object)
+    _ = tasti.proxy_scores(wl.score_left_side)
+    _ = tasti.proxy_scores(wl.score_mean_x)
+    _ = tasti.proxy_scores(wl.score_rare, mode="top1")
+    assert tasti.index.cost.target_invocations == inv_before
+
+
+def test_text_workload_end_to_end():
+    wl = make_workload("wikisql", n_records=2000)
+    cfg = TastiConfig(n_train=150, n_reps=300, k=4,
+                      triplet=TripletConfig(steps=150, batch=128),
+                      pretrain_steps=60)
+    sys_t = build_tasti(wl, cfg, variant="T")
+    truth = wl.n_predicates.astype(float)
+    proxy = sys_t.proxy_scores(wl.score_n_predicates)
+    assert np.corrcoef(proxy, truth)[0, 1] ** 2 > 0.5

@@ -1,0 +1,103 @@
+"""TASTI index unit tests: FPF 2-approximation, top-k caching, cracking."""
+import numpy as np
+import pytest
+
+from repro.core.fpf import fpf_select, max_intra_cluster_dist
+from repro.core.index import TastiIndex
+from repro.core.propagation import (propagate_categorical, propagate_numeric,
+                                    propagate_top1)
+
+
+def _embs(n=400, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 5, size=(8, d))
+    asg = rng.integers(0, 8, size=n)
+    return (centers[asg] + rng.normal(0, 0.5, size=(n, d))).astype(np.float32)
+
+
+def test_fpf_2_approximation():
+    x = _embs()
+    k = 8
+    reps = fpf_select(x, k, random_fraction=0.0, seed=0)
+    got = max_intra_cluster_dist(x, reps)
+    # brute-force optimum over many random k-subsets as a lower-bound probe
+    rng = np.random.default_rng(1)
+    best = np.inf
+    for _ in range(300):
+        cand = rng.choice(len(x), size=k, replace=False)
+        d = np.sqrt((((x[:, None] - x[cand][None]) ** 2).sum(-1)).min(1)).max()
+        best = min(best, d)
+    assert got <= 2.0 * best + 1e-5
+
+
+def test_fpf_covers_all_clusters():
+    x = _embs()
+    reps = fpf_select(x, 16, random_fraction=0.0, seed=3)
+    assert len(np.unique(reps)) == 16
+    # FPF with 16 points over 8 well-separated clusters must hit every cluster
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 5, size=(8, 16))
+    asg_reps = ((x[reps][:, None] - centers[None]) ** 2).sum(-1).argmin(1)
+    assert len(np.unique(asg_reps)) == 8
+
+
+def _build_index(x, n_reps=32, k=4):
+    def annotate(ids):
+        return [float(i) for i in ids]  # annotation = record id (traceable)
+    return TastiIndex.build(x, n_reps, annotate, k=k, random_fraction=0.0)
+
+
+def test_index_topk_matches_bruteforce():
+    x = _embs(200, 8)
+    idx = _build_index(x, n_reps=16, k=4)
+    d_full = ((x[:, None] - x[idx.rep_ids][None]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.sort(d_full, 1)[:, :4], idx.topk_d2,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_crack_equals_full_rebuild():
+    x = _embs(300, 8)
+    idx = _build_index(x, n_reps=16, k=4)
+    # pick new ids disjoint from the existing representatives
+    pool = np.setdiff1d(np.arange(len(x)), idx.rep_ids)
+    new_ids = pool[[3, 77, 150, 250]]
+    idx.crack(new_ids, [float(i) for i in new_ids])
+
+    def annotate(ids):
+        return [float(i) for i in ids]
+    all_reps = np.concatenate([_build_index(x, 16, 4).rep_ids, new_ids])
+    d_full = ((x[:, None] - x[all_reps][None]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.sort(d_full, 1)[:, :4], idx.topk_d2,
+                               rtol=1e-4, atol=1e-4)
+    assert idx.n_reps == 20
+
+
+def test_crack_dedupes_existing_reps():
+    x = _embs(100, 8)
+    idx = _build_index(x, n_reps=8, k=2)
+    before = idx.n_reps
+    idx.crack(idx.rep_ids[:3], [0.0, 0.0, 0.0])
+    assert idx.n_reps == before
+
+
+def test_propagation_modes():
+    rep_scores = np.array([0.0, 1.0, 2.0, 3.0])
+    topk_ids = np.array([[0, 1], [2, 3]])
+    topk_d2 = np.array([[0.01, 1.0], [0.25, 0.25]])
+    num = propagate_numeric(rep_scores, topk_ids, topk_d2)
+    assert 0.0 < num[0] < 0.5        # heavily weighted to rep 0
+    assert num[1] == pytest.approx(2.5)
+    cat = propagate_categorical(rep_scores.astype(int), topk_ids, topk_d2, 4)
+    assert cat[0] == 0
+    top1 = propagate_top1(rep_scores, topk_ids, topk_d2)
+    assert top1[1] > top1[0]
+
+
+def test_index_save_load_roundtrip(tmp_path):
+    x = _embs(100, 8)
+    idx = _build_index(x, n_reps=8, k=2)
+    idx.save(str(tmp_path / "idx"))
+    idx2 = TastiIndex.load(str(tmp_path / "idx"))
+    np.testing.assert_array_equal(idx.topk_ids, idx2.topk_ids)
+    np.testing.assert_allclose(idx.topk_d2, idx2.topk_d2)
+    assert idx2.annotations == idx.annotations

@@ -1,0 +1,100 @@
+"""Property-based validation of the paper's §5 theory with hypothesis.
+
+Theorem 1 (zero loss): if the embedding equals the schema metric coordinates
+(zero triplet loss by construction) and clustering is dense (max intra-cluster
+embedding distance < m), then for any K_Q-Lipschitz query loss the gap is at
+most M*K_Q.
+
+Also: the per-example triplet loss dominance of Lemma 3 and monotonicity
+invariants of the propagation operator.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.propagation import propagate_numeric
+from repro.core.triplet import population_triplet_loss
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(50, 200),
+    k_q=st.floats(0.1, 5.0),
+    seed=st.integers(0, 10 ** 6),
+)
+def test_theorem1_zero_loss_bound(n, k_q, seed):
+    rng = np.random.default_rng(seed)
+    # records live in a 2D metric space; embedding == identity (zero loss)
+    x = rng.uniform(0, 1, size=(n, 2)).astype(np.float32)
+    emb = x.copy()
+    # dense clustering: reps on a grid with spacing -> max dist m
+    g = 8
+    gx, gy = np.meshgrid(np.linspace(0, 1, g), np.linspace(0, 1, g))
+    reps = np.stack([gx.ravel(), gy.ravel()], 1).astype(np.float32)
+    d2 = ((emb[:, None] - reps[None]) ** 2).sum(-1)
+    nearest = d2.argmin(1)
+    m_dist = np.sqrt(d2.min(1).max())          # max intra-cluster distance
+    # K_Q-Lipschitz query: f(x) = k_q * x[0]; loss |f - fhat|
+    f = k_q * x[:, 0]
+    f_reps = k_q * reps[:, 0]
+    fhat = f_reps[nearest]
+    gap = np.abs(f - fhat).mean()
+    # Thm 1: gap <= M * K_Q with M = the metric radius containing each
+    # cluster; here d == embedding distance so M = m_dist.
+    assert gap <= m_dist * k_q + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), margin=st.floats(0.1, 2.0))
+def test_lemma3_hinge_dominates_indicator(seed, margin):
+    rng = np.random.default_rng(seed)
+    a, p, n = rng.normal(size=(3, 8))
+    d_ap = np.abs(rng.normal())
+    d_an = np.abs(rng.normal())
+    hinge = max(0.0, margin + d_ap - d_an) / margin
+    indicator = 1.0 if d_an <= d_ap else 0.0
+    assert hinge >= indicator - 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_propagation_convex_combination(seed):
+    """Propagated numeric scores stay inside [min, max] of rep scores."""
+    rng = np.random.default_rng(seed)
+    c, n, k = 20, 100, 4
+    rep_scores = rng.normal(size=c)
+    ids = rng.integers(0, c, size=(n, k))
+    d2 = rng.uniform(0.01, 4.0, size=(n, k))
+    out = propagate_numeric(rep_scores, ids, d2)
+    assert np.all(out <= rep_scores.max() + 1e-9)
+    assert np.all(out >= rep_scores.min() - 1e-9)
+
+
+def test_population_triplet_loss_zero_for_perfect_embedding():
+    rng = np.random.default_rng(0)
+    coords = rng.uniform(0, 10, size=(80, 2))
+
+    def dist_fn(i, j):
+        return float(np.linalg.norm(coords[i] - coords[j]))
+
+    # embedding = coords scaled so that the margin is always cleared between
+    # inside-ball and outside-ball pairs
+    emb = coords * 10.0
+    ids = np.arange(80)
+    loss = population_triplet_loss(emb, dist_fn, ids, m_radius=1.0,
+                                   margin=1.0, n_samples=400)
+    assert loss < 0.05
+
+
+def test_population_triplet_loss_positive_for_random_embedding():
+    rng = np.random.default_rng(0)
+    coords = rng.uniform(0, 10, size=(80, 2))
+    emb = rng.normal(size=(80, 8))
+
+    def dist_fn(i, j):
+        return float(np.linalg.norm(coords[i] - coords[j]))
+
+    ids = np.arange(80)
+    loss = population_triplet_loss(emb, dist_fn, ids, m_radius=1.0,
+                                   margin=1.0, n_samples=400)
+    assert loss > 0.2
