@@ -14,6 +14,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core.baselines import train_query_proxy, ProxyConfig
+from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.pipeline import TastiConfig, TastiSystem, build_tasti
 from repro.core.schema import TARGET_DNN_COST_S, make_workload
 from repro.core.triplet import TripletConfig
@@ -57,6 +58,17 @@ def get_tasti(name: str, variant: str = "T", quick: bool = False,
         _CACHE[key] = build_tasti(wl, tasti_cfg(quick, **overrides),
                                   variant=variant)
     return _CACHE[key]
+
+
+def get_engine(name: str, variant: str = "T", quick: bool = False,
+               **overrides) -> QueryEngine:
+    """The memoized TASTI system's query engine (shared caches per system).
+
+    Benchmark drivers execute ``QuerySpec`` s against this; method-vs-method
+    comparisons should pass ``reuse_labels=False`` so one method's oracle
+    calls don't subsidize another's invocation count.
+    """
+    return get_tasti(name, variant, quick, **overrides).engine
 
 
 def get_blazeit_scores(name: str, score_attr: str, quick: bool = False,

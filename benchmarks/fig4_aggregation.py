@@ -1,10 +1,13 @@
 """Fig. 4: target-DNN invocations for aggregation queries (lower is better):
 random sampling, BlazeIt proxy (10x construction budget), TASTI-PT, TASTI-T.
+All methods run through the declarative engine (``QuerySpec`` -> plan ->
+execute); baselines supply their proxy scores via the spec's ``proxy``
+override, TASTI variants use the engine's memoized propagation.
 """
 import numpy as np
 
 from benchmarks import common
-from repro.core.queries.aggregation import aggregate_control_variates
+from repro.core.engine import QuerySpec
 
 
 def run(quick: bool = False):
@@ -14,24 +17,26 @@ def run(quick: bool = False):
         wl = common.get_workload(ds, quick)
         attr = common.agg_score_attr(ds)
         truth = common.truth_vector(wl, attr)
-        oracle = lambda ids: truth[ids]
         seeds = range(2 if quick else 3)
 
-        def mean_inv(proxy, use_cv=True):
-            return float(np.mean([aggregate_control_variates(
-                proxy, oracle, err=err, seed=s, use_cv=use_cv).n_invocations
+        def mean_inv(engine, proxy=None, use_cv=True):
+            return float(np.mean([engine.execute(QuerySpec(
+                kind="aggregation", score=attr, proxy=proxy, err=err,
+                seed=s, use_cv=use_cv, reuse_labels=False)).n_invocations
                 for s in seeds]))
 
-        rnd = mean_inv(np.zeros(len(truth)), use_cv=False)
+        eng_t = common.get_engine(ds, "T", quick)
+        rnd = mean_inv(eng_t, proxy=np.zeros(len(truth)), use_cv=False)
         rows.append((f"fig4/{ds}/random", "invocations", rnd))
         bl = common.get_blazeit_scores(ds, attr, quick)
-        rows.append((f"fig4/{ds}/blazeit", "invocations", mean_inv(bl)))
+        rows.append((f"fig4/{ds}/blazeit", "invocations",
+                     mean_inv(eng_t, proxy=bl)))
         for variant in ("PT", "T"):
-            sv = common.get_tasti(ds, variant, quick)
-            proxy = sv.proxy_scores(getattr(wl, attr))
+            eng = common.get_engine(ds, variant, quick)
             rows.append((f"fig4/{ds}/tasti_{variant.lower()}", "invocations",
-                         mean_inv(proxy)))
+                         mean_inv(eng)))
             if variant == "T":
+                proxy = eng.proxy_scores(attr)
                 rho2 = float(np.corrcoef(proxy, truth)[0, 1] ** 2)
                 rows.append((f"fig4/{ds}/tasti_t_rho2", "rho2", round(rho2, 3)))
     return rows

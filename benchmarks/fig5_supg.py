@@ -1,12 +1,13 @@
 """Fig. 5: false-positive rate for recall-target SUPG queries (lower is
 better): BlazeIt-style proxy vs TASTI-PT vs TASTI-T at a fixed oracle budget.
+All methods execute ``QuerySpec(kind="selection")`` through the engine (which
+clips proxies to [0,1] and picks numeric propagation automatically).
 """
 import numpy as np
 
 from benchmarks import common
-from repro.core.queries.selection import (achieved_recall,
-                                          false_positive_rate,
-                                          supg_recall_target)
+from repro.core.engine import QuerySpec
+from repro.core.queries.selection import achieved_recall, false_positive_rate
 
 
 def run(quick: bool = False):
@@ -17,29 +18,29 @@ def run(quick: bool = False):
         n = len(wl.features)
         truth = np.asarray([score_fn(r) for r in
                             wl.target_dnn_batch(range(n))]) > 0.5
-        oracle = lambda ids: truth[ids].astype(float)
         budget = 300 if quick else 500
         seeds = range(2 if quick else 4)
 
-        def mean_fpr(proxy):
+        def mean_fpr(engine, proxy=None):
             fprs, recs = [], []
             for s in seeds:
-                r = supg_recall_target(np.clip(proxy, 0, 1), oracle,
-                                       budget=budget, recall_target=0.9,
-                                       delta=0.05, seed=s)
+                r = engine.execute(QuerySpec(
+                    kind="selection", score=score_fn, proxy=proxy,
+                    budget=budget, recall_target=0.9, delta=0.05, seed=s,
+                    score_key=f"fig5/{ds}", reuse_labels=False))
                 fprs.append(false_positive_rate(r.selected, truth))
                 recs.append(achieved_recall(r.selected, truth))
             return float(np.mean(fprs)), float(np.mean(recs))
 
+        eng_t = common.get_engine(ds, "T", quick)
         bl = common.get_blazeit_scores(ds, "sel_rare", quick, classify=True,
                                        score_fn=score_fn)
-        f, rec = mean_fpr(bl)
+        f, rec = mean_fpr(eng_t, proxy=bl)
         rows.append((f"fig5/{ds}/blazeit", "fpr", round(f, 4)))
         rows.append((f"fig5/{ds}/blazeit_recall", "recall", round(rec, 3)))
         for variant in ("PT", "T"):
-            sv = common.get_tasti(ds, variant, quick)
-            proxy = sv.proxy_scores(score_fn)
-            f, rec = mean_fpr(proxy)
+            eng = common.get_engine(ds, variant, quick)
+            f, rec = mean_fpr(eng)
             rows.append((f"fig5/{ds}/tasti_{variant.lower()}", "fpr", round(f, 4)))
             rows.append((f"fig5/{ds}/tasti_{variant.lower()}_recall", "recall",
                          round(rec, 3)))

@@ -1,10 +1,12 @@
 """Fig. 6: target-DNN invocations for limit queries over rare events (lower is
-better).  TASTI uses k=1 propagation with distance tie-breaks (paper §6.3).
+better).  Every method executes ``QuerySpec(kind="limit")`` through the
+engine, which auto-selects k=1 propagation with distance tie-breaks for TASTI
+proxies (paper §6.3); baselines pass their scores via the ``proxy`` override.
 """
 import numpy as np
 
 from benchmarks import common
-from repro.core.queries.limit import limit_query
+from repro.core.engine import QuerySpec
 
 
 def run(quick: bool = False):
@@ -19,23 +21,26 @@ def run(quick: bool = False):
             rows.append((f"fig6/{ds}/rare_total", "count", 0))
             continue
         want = min(10, max(1, total_rare // 2))
-        oracle = lambda ids: truth[ids]
         rows.append((f"fig6/{ds}/rare_total", "count", total_rare))
 
+        def spec(proxy=None):
+            return QuerySpec(kind="limit", score=score_fn, proxy=proxy,
+                             k_results=want, batch=4,
+                             score_key=f"fig6/{ds}", reuse_labels=False)
+
+        eng_t = common.get_engine(ds, "T", quick)
         rng = np.random.default_rng(0)
-        res_r = limit_query(rng.uniform(size=n), oracle, k_results=want,
-                            batch=4)
+        res_r = eng_t.execute(spec(proxy=rng.uniform(size=n)))
         rows.append((f"fig6/{ds}/random_order", "invocations",
                      res_r.n_invocations))
         bl = common.get_blazeit_scores(ds, "rare_event", quick, classify=True,
                                        score_fn=score_fn,
                                        budget=common.tmas_budget(wl))
-        res_b = limit_query(bl, oracle, k_results=want, batch=4)
+        res_b = eng_t.execute(spec(proxy=bl))
         rows.append((f"fig6/{ds}/blazeit", "invocations", res_b.n_invocations))
         for variant in ("PT", "T"):
-            sv = common.get_tasti(ds, variant, quick)
-            proxy = sv.proxy_scores(score_fn, mode="top1")
-            res = limit_query(proxy, oracle, k_results=want, batch=4)
+            eng = common.get_engine(ds, variant, quick)
+            res = eng.execute(spec())
             rows.append((f"fig6/{ds}/tasti_{variant.lower()}", "invocations",
                          res.n_invocations))
     return rows

@@ -1,11 +1,13 @@
-"""Table 2: cracking (seed-averaged) — run one query, fold its target-DNN invocations back
-into the index, run the second query; report before/after."""
+"""Table 2: cracking — run one query with the engine's cracking feedback loop
+enabled (``QuerySpec(crack=True)`` folds its target-DNN invocations back into
+the index), run the second query; report before/after.  Fresh systems per
+cell because cracking mutates the index."""
 import numpy as np
 
 from benchmarks import common
+from repro.core.engine import QuerySpec
 from repro.core.pipeline import build_tasti
-from repro.core.queries.aggregation import aggregate_control_variates
-from repro.core.queries.selection import false_positive_rate, supg_recall_target
+from repro.core.queries.selection import false_positive_rate
 
 
 def run(quick: bool = False):
@@ -15,37 +17,34 @@ def run(quick: bool = False):
         truth_cnt = common.truth_vector(wl, "score_count")
         truth_sel = truth_cnt > 0
 
+        def supg_spec(seed):
+            return QuerySpec(kind="selection", score="score_has_object",
+                             budget=400, seed=seed, reuse_labels=False)
+
+        def agg_spec(seed, crack=False):
+            return QuerySpec(kind="aggregation", score="score_count",
+                             err=0.05, seed=seed, crack=crack,
+                             reuse_labels=False)
+
         # --- agg then SUPG ---
-        sv = build_tasti(wl, common.tasti_cfg(quick), variant="T")
-        proxy_sel = np.clip(sv.proxy_scores(wl.score_has_object), 0, 1)
+        eng = build_tasti(wl, common.tasti_cfg(quick), variant="T").engine
         fpr_before = false_positive_rate(
-            supg_recall_target(proxy_sel, lambda i: truth_sel[i].astype(float),
-                               budget=400, seed=0).selected, truth_sel)
-        agg = aggregate_control_variates(sv.proxy_scores(wl.score_count),
-                                         lambda i: truth_cnt[i], err=0.05,
-                                         seed=0)
-        sv.crack_with(agg.sampled_ids)
-        proxy_sel2 = np.clip(sv.proxy_scores(wl.score_has_object), 0, 1)
+            eng.execute(supg_spec(0)).selected, truth_sel)
+        eng.execute(agg_spec(0, crack=True))   # cracks its samples back in
         fpr_after = false_positive_rate(
-            supg_recall_target(proxy_sel2, lambda i: truth_sel[i].astype(float),
-                               budget=400, seed=0).selected, truth_sel)
+            eng.execute(supg_spec(0)).selected, truth_sel)
         rows.append((f"table2/{ds}/agg_then_supg_before", "fpr",
                      round(fpr_before, 4)))
         rows.append((f"table2/{ds}/agg_then_supg_after", "fpr",
                      round(fpr_after, 4)))
 
         # --- SUPG then agg ---
-        sv2 = build_tasti(wl, common.tasti_cfg(quick), variant="T")
-        n_before = aggregate_control_variates(
-            sv2.proxy_scores(wl.score_count), lambda i: truth_cnt[i],
-            err=0.05, seed=1).n_invocations
-        supg = supg_recall_target(
-            np.clip(sv2.proxy_scores(wl.score_has_object), 0, 1),
-            lambda i: truth_sel[i].astype(float), budget=400, seed=1)
-        sv2.crack_with(np.unique(supg.sampled_ids))
-        n_after = aggregate_control_variates(
-            sv2.proxy_scores(wl.score_count), lambda i: truth_cnt[i],
-            err=0.05, seed=1).n_invocations
+        eng2 = build_tasti(wl, common.tasti_cfg(quick), variant="T").engine
+        n_before = eng2.execute(agg_spec(1)).n_invocations
+        eng2.execute(QuerySpec(kind="selection", score="score_has_object",
+                               budget=400, seed=1, crack=True,
+                               reuse_labels=False))
+        n_after = eng2.execute(agg_spec(1)).n_invocations
         rows.append((f"table2/{ds}/supg_then_agg_before", "invocations",
                      n_before))
         rows.append((f"table2/{ds}/supg_then_agg_after", "invocations",

@@ -1,6 +1,8 @@
-"""Index cracking across a query session (paper §6.6): every target-DNN
-invocation a query makes is folded back into the index, improving later
-queries — and the index persists to disk between sessions.
+"""Index cracking across a query session (paper §6.6): with the engine's
+feedback loop enabled, every target-DNN invocation a query makes is folded
+back into the index, improving later queries — labels are shared across the
+session, and the index persists to disk (versioned JSON + npz) between
+sessions.
 
     PYTHONPATH=src python examples/cracking_and_reuse.py
 """
@@ -8,51 +10,55 @@ import tempfile
 
 import numpy as np
 
+from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.index import TastiIndex
 from repro.core.pipeline import TastiConfig, build_tasti
-from repro.core.queries.aggregation import aggregate_control_variates
-from repro.core.queries.selection import false_positive_rate, supg_recall_target
+from repro.core.queries.selection import false_positive_rate
 from repro.core.schema import make_workload
 from repro.core.triplet import TripletConfig
 
 
 def main() -> None:
     wl = make_workload("taipei", n_frames=6000)
-    truth_cnt = wl.counts.astype(float)
     truth_sel = wl.counts > 0
     cfg = TastiConfig(n_train=250, n_reps=500, k=4,
                       triplet=TripletConfig(steps=250), pretrain_steps=80)
     tasti = build_tasti(wl, cfg, variant="T")
+    engine = tasti.engine
 
-    # Query 1: aggregation (samples records with the target DNN)
-    agg = aggregate_control_variates(tasti.proxy_scores(wl.score_count),
-                                     tasti.oracle(wl.score_count), err=0.05)
-    print(f"query 1 (aggregation): {agg.n_invocations} target-DNN calls")
+    supg = QuerySpec(kind="selection", score="score_has_object", budget=400,
+                     seed=0, reuse_labels=False)
 
     # FPR of a SUPG query *before* cracking
-    sel_proxy = np.clip(tasti.proxy_scores(wl.score_has_object), 0, 1)
-    before = false_positive_rate(
-        supg_recall_target(sel_proxy, tasti.oracle(wl.score_has_object),
-                           budget=400, seed=0).selected, truth_sel)
+    before = false_positive_rate(engine.execute(supg).selected, truth_sel)
 
-    # Crack: fold query 1's annotations into the index (cheap: distances to
-    # the new representatives only)
-    tasti.crack_with(agg.sampled_ids)
+    # Query 1: aggregation with the cracking feedback loop on — its samples
+    # are annotated by the target DNN and folded straight back into the index
+    # (cheap: distances to the new representatives only)
+    agg = engine.execute(QuerySpec(kind="aggregation", score="score_count",
+                                   err=0.05, crack=True))
+    print(f"query 1 (aggregation): {agg.n_invocations} target-DNN calls, "
+          f"{agg.n_cracked} folded back as new representatives")
     print(f"cracked index: now {tasti.index.n_reps} representatives, "
           f"max intra-cluster dist {tasti.index.max_intra_cluster():.3f}")
 
-    sel_proxy2 = np.clip(tasti.proxy_scores(wl.score_has_object), 0, 1)
-    after = false_positive_rate(
-        supg_recall_target(sel_proxy2, tasti.oracle(wl.score_has_object),
-                           budget=400, seed=0).selected, truth_sel)
+    # Query 2: the proxy cache self-invalidated, so the SUPG query sees the
+    # post-crack propagation
+    after = false_positive_rate(engine.execute(supg).selected, truth_sel)
     print(f"query 2 (SUPG) FPR: before crack {before:.4f} -> after {after:.4f}")
+    print(f"session stats: {engine.stats}")
 
-    # Persist and reload the index (new session, no reconstruction)
+    # Persist and reload the index (new session, no reconstruction).  The
+    # format is versioned JSON + npz — no pickle, safe to share.
     with tempfile.TemporaryDirectory() as d:
         tasti.index.save(f"{d}/taipei_index")
         idx2 = TastiIndex.load(f"{d}/taipei_index")
+        engine2 = QueryEngine(idx2, wl)
+        agg2 = engine2.execute(QuerySpec(kind="aggregation",
+                                         score="score_count", err=0.05))
         print(f"reloaded index: {idx2.n_reps} reps, "
-              f"{idx2.cost.target_invocations} total target-DNN calls charged")
+              f"{idx2.cost.target_invocations} total target-DNN calls charged; "
+              f"fresh-session estimate {agg2.estimate:.3f}")
 
 
 if __name__ == "__main__":

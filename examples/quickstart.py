@@ -1,16 +1,14 @@
 """Quickstart: build a TASTI index on a synthetic video workload and run the
-paper's three query types against it.
+paper's three query types against it — declaratively, through the query
+engine (``QuerySpec`` -> plan -> execute).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.core.engine import QuerySpec
 from repro.core.pipeline import TastiConfig, build_tasti
-from repro.core.queries.aggregation import aggregate_control_variates
-from repro.core.queries.limit import limit_query
-from repro.core.queries.selection import (achieved_recall,
-                                          false_positive_rate,
-                                          supg_recall_target)
+from repro.core.queries.selection import achieved_recall, false_positive_rate
 from repro.core.schema import make_workload
 from repro.core.triplet import TripletConfig
 
@@ -33,27 +31,29 @@ def main() -> None:
           f"construction = {tasti.index.cost.wall_clock_s():.0f}s "
           f"(cost model; {tasti.index.cost.target_invocations} target-DNN calls)")
 
-    # 3a. Aggregation: average cars/frame with an error bound.
-    proxy = tasti.proxy_scores(wl.score_count)
-    agg = aggregate_control_variates(proxy, tasti.oracle(wl.score_count),
-                                     err=0.05)
+    # 3a. Aggregation: average cars/frame with an error bound.  The engine
+    #     picks numeric propagation and wires the oracle automatically.
+    agg = tasti.execute(QuerySpec(kind="aggregation", score="score_count",
+                                  err=0.05))
     print(f"aggregation: est={agg.estimate:.3f} (true {truth.mean():.3f}) "
           f"using {agg.n_invocations} target-DNN calls")
 
     # 3b. Selection with recall guarantee (SUPG): frames with any car.
     truth_sel = wl.counts > 0
-    sel_proxy = np.clip(tasti.proxy_scores(wl.score_has_object), 0, 1)
-    sel = supg_recall_target(sel_proxy, tasti.oracle(wl.score_has_object),
-                             budget=300, recall_target=0.9)
+    sel = tasti.execute(QuerySpec(kind="selection", score="score_has_object",
+                                  budget=300, recall_target=0.9))
     print(f"selection: |S|={len(sel.selected)} "
           f"recall={achieved_recall(sel.selected, truth_sel):.3f} "
           f"fpr={false_positive_rate(sel.selected, truth_sel):.3f}")
 
-    # 3c. Limit query: find 10 rare heavy-traffic frames.
-    lim_proxy = tasti.proxy_scores(wl.score_rare, mode="top1")
-    lim = limit_query(lim_proxy, tasti.oracle(wl.score_rare), k_results=10)
-    print(f"limit: found {len(lim.found_ids)} rare frames with "
-          f"{lim.n_invocations} target-DNN calls")
+    # 3c. Limit query: find 10 rare heavy-traffic frames.  The engine uses
+    #     top-1 propagation with distance tie-breaks (§6.3) for this kind.
+    lim = tasti.execute(QuerySpec(kind="limit", score="score_rare",
+                                  k_results=10))
+    print(f"limit: found {len(lim.selected)} rare frames with "
+          f"{lim.n_invocations} target-DNN calls "
+          f"({lim.n_oracle_cached} labels served from the session cache)")
+    print(f"  plan: {' | '.join(lim.plan.trace)}")
 
     # 4. The same index answers a brand-new query type with zero new
     #    target-DNN calls (task-agnosticity).

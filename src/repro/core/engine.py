@@ -1,0 +1,366 @@
+"""Declarative query engine: ``QuerySpec`` -> ``QueryPlan`` -> ``QueryResult``.
+
+The paper's core promise is one semantic index serving *many* query types
+(aggregation §4.3, selection §4.3/SUPG, limit §4.3) without per-query proxies.
+This module is the query layer that delivers that promise as an API: callers
+describe the query declaratively and the engine owns everything they used to
+hand-assemble —
+
+* **memoized proxy scores**: propagation (§4.2) runs once per
+  ``(score function, mode)`` across queries and is invalidated when the index
+  is cracked;
+* **automatic propagation choice** per query kind: numeric for aggregation,
+  top-1 with distance tie-breaks for limit queries (§6.3), clipped-numeric
+  for SUPG selection, with ``categorical`` available as an explicit mode;
+* **a shared oracle-label cache**: records annotated by the target DNN for one
+  query are free for every later query, whatever its score function;
+* **an opt-in cracking feedback loop** (§3.3): every fresh target-DNN
+  annotation a query makes can be folded straight back into the index.
+
+Query kinds are pluggable through :mod:`repro.core.queries.registry`; the
+numerical kernels stay in ``repro.core.queries.*`` and remain callable
+directly (legacy shims).
+
+    engine = QueryEngine(index, workload)
+    res = engine.execute(QuerySpec(kind="aggregation", score="score_count",
+                                   err=0.05))
+    res.estimate, res.n_invocations, res.plan.trace
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core import propagation, schema as schema_lib
+from repro.core.index import TastiIndex
+# importing the package registers the built-in executors
+from repro.core import queries as _queries  # noqa: F401
+from repro.core.queries.registry import QueryExecutor, get_executor
+
+PROPAGATION_MODES = ("numeric", "top1", "categorical")
+
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+@dataclass
+class QuerySpec:
+    """Declarative description of one query.
+
+    ``score`` is either the name of a workload scoring method (portable,
+    JSON-friendly) or any callable mapping a target-DNN output to a float.
+    Unused knobs are ignored by kinds that don't need them.
+    """
+
+    kind: str                                   # "aggregation"|"selection"|"limit"|...
+    score: Union[str, Callable, None] = None    # scoring fn (name or callable)
+    proxy: Optional[np.ndarray] = None          # precomputed proxy override
+    propagation: Optional[str] = None           # None -> kind default
+    n_classes: Optional[int] = None             # required for "categorical"
+
+    # statistical knobs
+    err: float = 0.05                           # aggregation error bound
+    delta: float = 0.05                         # confidence (all kinds)
+    recall_target: float = 0.9                  # selection
+    budget: Optional[int] = None                # selection oracle budget
+    k_results: Optional[int] = None             # limit: K matches wanted
+    batch: Optional[int] = None                 # oracle batch (kind default)
+    min_samples: int = 64                       # aggregation
+    max_samples: Optional[int] = None           # aggregation
+    max_invocations: int = 0                    # limit (0 = no cap)
+    use_cv: bool = True                         # aggregation control variates
+    seed: int = 0
+
+    # engine behaviour
+    score_key: Optional[str] = None             # explicit proxy-cache key
+    reuse_labels: bool = True                   # read the shared label cache
+    crack: Optional[bool] = None                # None -> engine default
+
+    _JSON_FIELDS = ("kind", "score", "propagation", "n_classes", "err",
+                    "delta", "recall_target", "budget", "k_results", "batch",
+                    "min_samples", "max_samples", "max_invocations", "use_cv",
+                    "seed", "score_key", "reuse_labels", "crack")
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "QuerySpec":
+        unknown = set(d) - set(cls._JSON_FIELDS)
+        if unknown:
+            raise ValueError(f"unknown QuerySpec fields: {sorted(unknown)}; "
+                             f"allowed: {sorted(cls._JSON_FIELDS)}")
+        if "kind" not in d:
+            raise ValueError("QuerySpec requires 'kind'")
+        return cls(**d)
+
+    def to_dict(self) -> Dict[str, Any]:
+        if self.score is not None and not isinstance(self.score, str):
+            raise ValueError("only specs with string `score` serialize to JSON")
+        if self.proxy is not None:
+            raise ValueError("specs with an external `proxy` array do not "
+                             "serialize to JSON")
+        return {k: getattr(self, k) for k in self._JSON_FIELDS
+                if getattr(self, k) != getattr(type(self), k, None)
+                or k == "kind"}
+
+
+# ---------------------------------------------------------------------------
+# Plan / result
+# ---------------------------------------------------------------------------
+@dataclass
+class QueryPlan:
+    """Compiled, validated form of a spec: every choice the engine made."""
+    spec: QuerySpec
+    kind: str
+    executor: QueryExecutor
+    propagation: str                 # resolved mode ("external" if proxy given)
+    clip01: bool
+    score_key: Any                   # proxy/label cache key
+    crack: bool
+    trace: List[str] = field(default_factory=list)
+
+
+@dataclass
+class QueryResult:
+    """Uniform result envelope for every query kind."""
+    kind: str
+    estimate: Optional[float]        # aggregation estimate (else None)
+    selected: Optional[np.ndarray]   # selection/limit record ids (else None)
+    threshold: Optional[float]       # selection tau (else None)
+    ci_half_width: Optional[float]   # aggregation CI (else None)
+    n_invocations: int               # the paper's cost metric for this query
+    n_oracle_fresh: int              # target-DNN calls actually made
+    n_oracle_cached: int             # label-cache hits (free)
+    n_cracked: int                   # reps folded back into the index
+    cost: Dict[str, float]           # modeled query-time cost breakdown
+    plan: QueryPlan
+    raw: Any                         # kind-specific result (AggResult, ...)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+class QueryEngine:
+    """Executes :class:`QuerySpec` s against a :class:`TastiIndex`.
+
+    Owns the per-session caches: memoized propagation per score function,
+    shared oracle labels across queries, and the optional cracking feedback
+    loop that folds every fresh annotation back into the index.
+    """
+
+    def __init__(self, index: TastiIndex, workload: Any = None,
+                 crack: bool = False):
+        self.index = index
+        self.workload = workload
+        self.crack_by_default = bool(crack)
+        self._proxy_cache: Dict[Any, np.ndarray] = {}
+        self._proxy_cache_version = index.version
+        self._label_cache: Dict[int, Any] = {}
+        self.stats: Dict[str, int] = {
+            "propagation_computes": 0,
+            "proxy_cache_hits": 0,
+            "label_fresh": 0,
+            "label_cache_hits": 0,
+            "cracked_records": 0,
+        }
+
+    # -- proxy scores (memoized propagation) ---------------------------------
+    def _score_fn(self, score: Union[str, Callable]) -> Callable:
+        if isinstance(score, str):
+            if self.workload is None:
+                raise ValueError("string `score` needs a workload to resolve "
+                                 f"{score!r} against")
+            fn = getattr(self.workload, score, None)
+            if fn is None or not callable(fn):
+                raise ValueError(f"workload {getattr(self.workload, 'name', '?')} "
+                                 f"has no scoring method {score!r}")
+            return fn
+        if callable(score):
+            return score
+        raise TypeError(f"score must be a str or callable, got {type(score)}")
+
+    def _cache_key(self, score, score_key=None):
+        # strings are stable across sessions; bound methods hash by
+        # (__func__, __self__) so repeated getattr lookups hit the same entry;
+        # lambdas memoize by identity (conservative but correct).
+        return score_key if score_key is not None else score
+
+    def proxy_scores(self, score: Union[str, Callable], mode: str = "numeric",
+                     n_classes: Optional[int] = None,
+                     score_key: Optional[str] = None) -> np.ndarray:
+        """Propagated proxy scores for ``score``, memoized per (score, mode).
+
+        The cache is invalidated whenever the index version changes (i.e.
+        after cracking), so callers always see post-crack scores.
+        """
+        if mode not in PROPAGATION_MODES:
+            raise ValueError(f"unknown propagation mode {mode!r}; "
+                             f"expected one of {PROPAGATION_MODES}")
+        if self._proxy_cache_version != self.index.version:
+            self._proxy_cache.clear()
+            self._proxy_cache_version = self.index.version
+        key = (self._cache_key(score, score_key), mode, n_classes)
+        if key in self._proxy_cache:
+            self.stats["proxy_cache_hits"] += 1
+            return self._proxy_cache[key]
+        fn = self._score_fn(score)
+        rep_scores = self.index.rep_scores(fn)
+        if mode == "numeric":
+            out = propagation.propagate_numeric(
+                rep_scores, self.index.topk_ids, self.index.topk_d2)
+        elif mode == "top1":
+            out = propagation.propagate_top1(
+                rep_scores, self.index.topk_ids, self.index.topk_d2)
+        else:  # categorical
+            if n_classes is None:
+                raise ValueError("categorical propagation requires n_classes")
+            out = propagation.propagate_categorical(
+                rep_scores, self.index.topk_ids, self.index.topk_d2,
+                n_classes=n_classes).astype(np.float64)
+        self.stats["propagation_computes"] += 1
+        self._proxy_cache[key] = out
+        return out
+
+    # -- oracle with the shared label cache ----------------------------------
+    def _make_oracle(self, score_fn: Callable, reuse: bool,
+                     counters: Dict[str, int],
+                     labeled: List[int]) -> Callable[[np.ndarray], np.ndarray]:
+        """Wrap the workload target DNN: cache annotations by record id so a
+        record labeled for one query is free for every later one."""
+        wl = self.workload
+
+        def call(ids) -> np.ndarray:
+            ids = np.asarray(ids, np.int64)
+            if reuse:
+                missing = np.unique(np.asarray(
+                    [i for i in ids if int(i) not in self._label_cache],
+                    np.int64))
+            else:
+                missing = ids
+            if len(missing):
+                anns = wl.target_dnn_batch(missing)
+                for i, a in zip(missing, anns):
+                    self._label_cache[int(i)] = a
+                labeled.extend(int(i) for i in missing)
+            counters["fresh"] += len(missing)
+            counters["cached"] += len(ids) - len(missing)
+            return np.asarray([score_fn(self._label_cache[int(i)])
+                               for i in ids], np.float64)
+
+        return call
+
+    # -- plan ----------------------------------------------------------------
+    def plan(self, spec: QuerySpec) -> QueryPlan:
+        """Compile and validate a spec without spending any oracle budget."""
+        executor = get_executor(spec.kind)
+        executor.validate(spec)
+        if isinstance(spec.score, str) and self.workload is not None:
+            self._score_fn(spec.score)  # fail fast on unknown score names
+        trace: List[str] = [f"kind={spec.kind}"]
+        if spec.proxy is not None:
+            mode = "external"
+            trace.append("proxy=external (propagation skipped)")
+        else:
+            if spec.score is None:
+                raise ValueError(f"{spec.kind} spec needs `score` or `proxy`")
+            mode = spec.propagation or executor.default_propagation
+            if mode not in PROPAGATION_MODES:
+                raise ValueError(f"unknown propagation mode {mode!r}")
+            if mode == "categorical" and spec.n_classes is None:
+                raise ValueError("categorical propagation requires n_classes")
+            chosen = "spec" if spec.propagation else "auto"
+            trace.append(f"propagation={mode} ({chosen})")
+        clip01 = executor.clip01
+        if clip01:
+            trace.append("proxy clipped to [0,1]")
+        crack = self.crack_by_default if spec.crack is None else spec.crack
+        trace.append(f"crack={'on' if crack else 'off'}, "
+                     f"label_reuse={'on' if spec.reuse_labels else 'off'}")
+        key = None if spec.score is None else \
+            self._cache_key(spec.score, spec.score_key)
+        return QueryPlan(spec=spec, kind=spec.kind, executor=executor,
+                         propagation=mode, clip01=clip01, score_key=key,
+                         crack=crack, trace=trace)
+
+    # -- execute -------------------------------------------------------------
+    def execute(self, spec_or_plan: Union[QuerySpec, QueryPlan]) -> QueryResult:
+        plan = (spec_or_plan if isinstance(spec_or_plan, QueryPlan)
+                else self.plan(spec_or_plan))
+        # each execution owns its trace: re-executing a caller-held plan must
+        # not mutate it (or earlier results that share it)
+        plan = dataclasses.replace(plan, trace=list(plan.trace))
+        spec = plan.spec
+        if spec.proxy is not None:
+            proxy = np.asarray(spec.proxy, np.float64)
+        else:
+            proxy = self.proxy_scores(spec.score, plan.propagation,
+                                      n_classes=spec.n_classes,
+                                      score_key=spec.score_key)
+        if plan.clip01:
+            proxy = np.clip(proxy, 0.0, 1.0)
+
+        if self.workload is None:
+            raise ValueError("executing queries requires a workload "
+                             "(the target-DNN oracle)")
+        score_fn = (self._score_fn(spec.score) if spec.score is not None
+                    else None)
+        if score_fn is None:
+            raise ValueError(f"{spec.kind} spec needs `score` to build the "
+                             "target-DNN oracle")
+        counters = {"fresh": 0, "cached": 0}
+        labeled: List[int] = []
+        oracle = self._make_oracle(score_fn, spec.reuse_labels, counters,
+                                   labeled)
+
+        raw = plan.executor.execute(plan, proxy, oracle)
+        summary = plan.executor.summarize(raw)
+
+        n_cracked = 0
+        if plan.crack and labeled:
+            n_cracked = self.crack_with(labeled)
+            plan.trace.append(f"cracked {n_cracked} new reps into the index")
+
+        self.stats["label_fresh"] += counters["fresh"]
+        self.stats["label_cache_hits"] += counters["cached"]
+        cost = {
+            "target_dnn_s": counters["fresh"] * schema_lib.TARGET_DNN_COST_S,
+            "crack_distance_s": (n_cracked * self.index.n_records
+                                 * schema_lib.DIST_COST_S),
+        }
+        return QueryResult(
+            kind=plan.kind,
+            estimate=summary.get("estimate"),
+            selected=summary.get("selected"),
+            threshold=summary.get("threshold"),
+            ci_half_width=summary.get("ci_half_width"),
+            n_invocations=int(summary["n_invocations"]),
+            n_oracle_fresh=counters["fresh"],
+            n_oracle_cached=counters["cached"],
+            n_cracked=n_cracked,
+            cost=cost,
+            plan=plan,
+            raw=raw,
+        )
+
+    # -- cracking feedback loop ----------------------------------------------
+    def crack_with(self, ids) -> int:
+        """Fold target-DNN annotations for ``ids`` into the index (§3.3),
+        reusing cached labels where available.  Returns the number of *new*
+        representatives added; the proxy cache invalidates automatically via
+        the index version."""
+        ids = np.unique(np.asarray(list(ids), np.int64))
+        if len(ids) == 0:
+            return 0
+        missing = np.asarray([i for i in ids if int(i) not in self._label_cache],
+                             np.int64)
+        if len(missing):
+            if self.workload is None:
+                raise ValueError("cracking unlabeled ids requires a workload")
+            for i, a in zip(missing, self.workload.target_dnn_batch(missing)):
+                self._label_cache[int(i)] = a
+        before = self.index.n_reps
+        self.index.crack(ids, [self._label_cache[int(i)] for i in ids])
+        added = self.index.n_reps - before
+        self.stats["cracked_records"] += added
+        return added

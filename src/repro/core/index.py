@@ -48,6 +48,8 @@ class TastiIndex:
     topk_ids: np.ndarray              # (N, k) indices INTO rep_ids
     k: int
     cost: IndexCost = field(default_factory=IndexCost)
+    version: int = 0                  # bumped on every crack that mutates;
+                                      # caches keyed on it self-invalidate
 
     @property
     def n_records(self) -> int:
@@ -114,6 +116,7 @@ class TastiIndex:
         self.topk_ids = np.take_along_axis(cand_i, order, axis=1)
         self.rep_ids = np.concatenate([self.rep_ids, new_ids])
         self.annotations = self.annotations + list(new_annotations)
+        self.version += 1
 
     # ------------------------------------------------------------------
     def rep_scores(self, score_fn: Callable[[Any], float]) -> np.ndarray:
@@ -123,25 +126,116 @@ class TastiIndex:
         return float(np.sqrt(np.max(self.topk_d2[:, 0])))
 
     # ------------------------------------------------------------------
+    # Persistence: arrays in ``<path>.npz``, everything else in a versioned
+    # ``<path>.meta.json`` — portable and safe to load (no pickle).  The old
+    # ``<path>.ann.pkl`` format is still *read* for one release.
+    FORMAT_VERSION = 1
+
     def save(self, path: str) -> None:
-        import pickle
+        import json
         p = pathlib.Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
         np.savez(p.with_suffix(".npz"), embeddings=self.embeddings,
                  rep_ids=self.rep_ids, topk_d2=self.topk_d2,
                  topk_ids=self.topk_ids, k=np.int64(self.k))
-        with open(p.with_suffix(".ann.pkl"), "wb") as f:
-            pickle.dump({"annotations": self.annotations,
-                         "cost": dataclasses.asdict(self.cost)}, f)
+        meta = {"format_version": self.FORMAT_VERSION,
+                "k": self.k,
+                "index_version": self.version,
+                "cost": dataclasses.asdict(self.cost),
+                "annotations": [_encode_annotation(a)
+                                for a in self.annotations]}
+        with open(p.with_suffix(".meta.json"), "w") as f:
+            json.dump(meta, f)
+        # re-saving a legacy index migrates it: drop the stale pickle so the
+        # saved artifact is pickle-free
+        p.with_suffix(".ann.pkl").unlink(missing_ok=True)
 
     @staticmethod
     def load(path: str) -> "TastiIndex":
-        import pickle
+        import json
         p = pathlib.Path(path)
         z = np.load(p.with_suffix(".npz"))
-        with open(p.with_suffix(".ann.pkl"), "rb") as f:
-            meta = pickle.load(f)
+        meta_json = p.with_suffix(".meta.json")
+        if meta_json.exists():
+            with open(meta_json) as f:
+                meta = json.load(f)
+            fv = int(meta.get("format_version", -1))
+            if fv > TastiIndex.FORMAT_VERSION:
+                raise ValueError(
+                    f"{meta_json} has format_version {fv}; this build reads "
+                    f"<= {TastiIndex.FORMAT_VERSION}")
+            annotations = [_decode_annotation(a) for a in meta["annotations"]]
+            index_version = int(meta.get("index_version", 0))
+        else:
+            # one-release fallback for pre-versioned pickle indexes
+            pkl = p.with_suffix(".ann.pkl")
+            if not pkl.exists():
+                raise FileNotFoundError(
+                    f"no {meta_json.name} or legacy {pkl.name} next to {p}")
+            import pickle
+            import warnings
+            warnings.warn(
+                f"loading legacy pickle index {pkl}; re-save to migrate to "
+                "the versioned JSON format (pickle support will be removed)",
+                DeprecationWarning, stacklevel=2)
+            with open(pkl, "rb") as f:
+                meta = pickle.load(f)
+            annotations = meta["annotations"]
+            index_version = 0
         return TastiIndex(embeddings=z["embeddings"], rep_ids=z["rep_ids"],
-                          annotations=meta["annotations"],
+                          annotations=annotations,
                           topk_d2=z["topk_d2"], topk_ids=z["topk_ids"],
-                          k=int(z["k"]), cost=IndexCost(**meta["cost"]))
+                          k=int(z["k"]), cost=IndexCost(**meta["cost"]),
+                          version=index_version)
+
+
+# ---------------------------------------------------------------------------
+# JSON codec for representative annotations.  Target-DNN outputs are schema
+# records (Scene / TextRecord), plain numbers, or nested lists/dicts thereof;
+# anything else must be made serializable by the caller (no pickle).
+# ---------------------------------------------------------------------------
+def _encode_annotation(a):
+    if a is None or isinstance(a, (bool, int, float, str)):
+        return a
+    if isinstance(a, np.integer):
+        return int(a)
+    if isinstance(a, np.floating):
+        return float(a)
+    if isinstance(a, np.ndarray):
+        return {"__kind__": "ndarray", "dtype": str(a.dtype),
+                "shape": list(a.shape), "data": a.ravel().tolist()}
+    if isinstance(a, schema_lib.Scene):
+        return {"__kind__": "scene",
+                "boxes": np.asarray(a.boxes, np.float64).reshape(-1).tolist(),
+                "n": int(a.count)}
+    if isinstance(a, schema_lib.TextRecord):
+        return {"__kind__": "text_record", "op": int(a.op),
+                "n_predicates": int(a.n_predicates)}
+    if isinstance(a, (list, tuple)):
+        return {"__kind__": "list", "items": [_encode_annotation(x) for x in a]}
+    if isinstance(a, dict):
+        return {"__kind__": "dict",
+                "items": {str(k): _encode_annotation(v) for k, v in a.items()}}
+    raise TypeError(
+        f"cannot JSON-encode annotation of type {type(a).__name__}; "
+        "supported: numbers, str, ndarray, Scene, TextRecord, list, dict")
+
+
+def _decode_annotation(a):
+    if not isinstance(a, dict):
+        return a
+    kind = a.get("__kind__")
+    if kind == "ndarray":
+        return np.asarray(a["data"], dtype=np.dtype(a["dtype"])).reshape(
+            a["shape"])
+    if kind == "scene":
+        boxes = np.asarray(a["boxes"], np.float64).reshape(int(a["n"]), 2)
+        return schema_lib.Scene(boxes=boxes)
+    if kind == "text_record":
+        return schema_lib.TextRecord(op=int(a["op"]),
+                                     n_predicates=int(a["n_predicates"]))
+    if kind == "list":
+        return [_decode_annotation(x) for x in a["items"]]
+    if kind == "dict":
+        return {k: _decode_annotation(v) for k, v in a["items"].items()}
+    raise ValueError(f"unknown annotation encoding {kind!r}")

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core import propagation, schema as schema_lib
 from repro.core.baselines import pretrain_embedder
 from repro.core.embedder import EmbedderConfig, embed_all, init_embedder
+from repro.core.engine import QueryEngine, QueryResult, QuerySpec
 from repro.core.fpf import fpf_select
 from repro.core.index import IndexCost, TastiIndex
 from repro.core.triplet import TripletConfig, mine_triplets, train_embedder
@@ -42,23 +43,39 @@ class TastiConfig:
 
 @dataclass
 class TastiSystem:
+    """Thin facade over :class:`~repro.core.engine.QueryEngine`.
+
+    The declarative path is ``system.execute(QuerySpec(...))``.
+    ``proxy_scores`` and ``crack_with`` are shims that share the engine's
+    caches (memoized propagation, crack invalidation).  ``oracle`` stays
+    deliberately cache-free: its callers count every invocation for benchmark
+    comparability — use ``execute`` to get the shared label cache.
+    """
     index: TastiIndex
     workload: Any
     embed_params: Any
     ecfg: EmbedderConfig
     variant: str
+    _engine: Optional[QueryEngine] = dataclasses.field(default=None,
+                                                       repr=False)
 
-    # -- paper §4: query-specific proxy scores ---------------------------
+    @property
+    def engine(self) -> QueryEngine:
+        if self._engine is None:
+            self._engine = QueryEngine(self.index, self.workload)
+        return self._engine
+
+    def execute(self, spec: QuerySpec) -> QueryResult:
+        return self.engine.execute(spec)
+
+    # -- paper §4: query-specific proxy scores (legacy shim) -------------
     def proxy_scores(self, score_fn: Callable[[Any], float],
-                     mode: str = "numeric") -> np.ndarray:
-        rep_scores = self.index.rep_scores(score_fn)
-        if mode == "numeric":
-            return propagation.propagate_numeric(
-                rep_scores, self.index.topk_ids, self.index.topk_d2)
-        if mode == "top1":
-            return propagation.propagate_top1(
-                rep_scores, self.index.topk_ids, self.index.topk_d2)
-        raise ValueError(mode)
+                     mode: str = "numeric",
+                     n_classes: Optional[int] = None) -> np.ndarray:
+        """Propagated proxy scores, memoized by the engine.
+        ``mode``: "numeric" | "top1" | "categorical" (needs ``n_classes``)."""
+        return self.engine.proxy_scores(score_fn, mode=mode,
+                                        n_classes=n_classes)
 
     def oracle(self, score_fn: Callable[[Any], float],
                counter: Optional[list] = None) -> Callable:
@@ -72,8 +89,7 @@ class TastiSystem:
         return call
 
     def crack_with(self, ids: np.ndarray) -> None:
-        anns = self.workload.target_dnn_batch(np.asarray(ids, np.int64))
-        self.index.crack(np.asarray(ids, np.int64), anns)
+        self.engine.crack_with(np.asarray(ids, np.int64))
 
 
 def build_tasti(workload, cfg: Optional[TastiConfig] = None,

@@ -83,3 +83,33 @@ def aggregate_direct(proxy: np.ndarray) -> float:
     """No-guarantee aggregation: the statistic straight off the proxy scores
     (paper §6.5, Table 1)."""
     return float(proxy.mean())
+
+
+# ---------------------------------------------------------------------------
+# Engine plug-in (repro.core.engine): declarative access to this algorithm.
+# ---------------------------------------------------------------------------
+from repro.core.queries.registry import QueryExecutor, register_executor
+
+
+@register_executor
+class AggregationExecutor(QueryExecutor):
+    """EB-stopped control-variate aggregation; numeric propagation (§4.2)."""
+
+    kind = "aggregation"
+    default_propagation = "numeric"
+    clip01 = False
+
+    def validate(self, spec) -> None:
+        if spec.err <= 0:
+            raise ValueError("aggregation needs a positive error bound `err`")
+
+    def execute(self, plan, proxy, oracle) -> AggResult:
+        s = plan.spec
+        return aggregate_control_variates(
+            proxy, oracle, err=s.err, delta=s.delta, batch=s.batch or 32,
+            min_samples=s.min_samples, max_samples=s.max_samples,
+            seed=s.seed, use_cv=s.use_cv)
+
+    def summarize(self, raw: AggResult) -> dict:
+        return {"estimate": raw.estimate, "ci_half_width": raw.ci_half_width,
+                "n_invocations": raw.n_invocations}

@@ -29,12 +29,50 @@ def limit_query(proxy: np.ndarray,
     found: list = []
     examined = 0
     for start in range(0, n, batch):
-        ids = order[start:start + batch]
+        # batching is vectorization sugar; the scan is conceptually one record
+        # at a time, so stop counting at the record that yields the Kth match
+        ids = order[start:start + min(batch, max_inv - examined)]
         labels = oracle(ids)
-        examined += len(ids)
-        found.extend(int(i) for i, l in zip(ids, labels) if l > 0.5)
+        done_at = len(ids)
+        for j, (i, l) in enumerate(zip(ids, labels)):
+            if l > 0.5:
+                found.append(int(i))
+                if len(found) >= k_results:
+                    done_at = j + 1
+                    break
+        examined += done_at
         if len(found) >= k_results or examined >= max_inv:
             break
     return LimitResult(found_ids=np.asarray(found[:k_results], np.int64),
                        n_invocations=examined,
                        examined_ids=order[:examined])
+
+
+# ---------------------------------------------------------------------------
+# Engine plug-in (repro.core.engine): declarative access to this algorithm.
+# ---------------------------------------------------------------------------
+from repro.core.queries.registry import QueryExecutor, register_executor
+
+
+@register_executor
+class LimitExecutor(QueryExecutor):
+    """Proxy-ordered scan for K matches; top-1 propagation with distance
+    tie-breaks, the paper's recommendation for limit queries (§6.3)."""
+
+    kind = "limit"
+    default_propagation = "top1"
+    clip01 = False
+
+    def validate(self, spec) -> None:
+        if not spec.k_results or spec.k_results <= 0:
+            raise ValueError("limit needs a positive `k_results`")
+
+    def execute(self, plan, proxy, oracle) -> LimitResult:
+        s = plan.spec
+        return limit_query(proxy, oracle, k_results=s.k_results,
+                           batch=s.batch or 16,
+                           max_invocations=s.max_invocations)
+
+    def summarize(self, raw: LimitResult) -> dict:
+        return {"selected": raw.found_ids,
+                "n_invocations": raw.n_invocations}

@@ -84,3 +84,34 @@ def achieved_recall(selected: np.ndarray, truth: np.ndarray) -> float:
     if total == 0:
         return 1.0
     return float(truth[selected].sum()) / total
+
+
+# ---------------------------------------------------------------------------
+# Engine plug-in (repro.core.engine): declarative access to this algorithm.
+# ---------------------------------------------------------------------------
+from repro.core.queries.registry import QueryExecutor, register_executor
+
+
+@register_executor
+class SelectionExecutor(QueryExecutor):
+    """SUPG recall-target selection; probability-shaped proxy in [0,1]."""
+
+    kind = "selection"
+    default_propagation = "numeric"
+    clip01 = True
+
+    def validate(self, spec) -> None:
+        if not spec.budget or spec.budget <= 0:
+            raise ValueError("selection needs a positive oracle `budget`")
+        if not (0.0 < spec.recall_target <= 1.0):
+            raise ValueError("recall_target must be in (0, 1]")
+
+    def execute(self, plan, proxy, oracle) -> SUPGResult:
+        s = plan.spec
+        return supg_recall_target(proxy, oracle, budget=s.budget,
+                                  recall_target=s.recall_target,
+                                  delta=s.delta, seed=s.seed)
+
+    def summarize(self, raw: SUPGResult) -> dict:
+        return {"selected": raw.selected, "threshold": raw.threshold,
+                "n_invocations": raw.n_invocations}

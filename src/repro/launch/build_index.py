@@ -1,9 +1,11 @@
 """Index-construction driver: build (or crack/update) a TASTI index over a
-workload and persist it.
+workload and persist it (versioned JSON + npz; see ``TastiIndex.save``).
 
     PYTHONPATH=src python -m repro.launch.build_index \
         --workload night-street --n-frames 8000 --variant T \
         --out /tmp/tasti/night_street
+
+Query the saved index declaratively with ``repro.launch.query``.
 
 At pod scale the embedding pass is the prefill-shaped workload hillclimbed in
 EXPERIMENTS.md §Perf/B (``--backbone`` selects any assigned architecture as
@@ -59,6 +61,7 @@ def main() -> None:
         "modeled_construction_s": round(cost.wall_clock_s(), 1),
         "actual_build_s_cpu": round(dt, 1),
         "out": args.out,
+        "format_version": system.index.FORMAT_VERSION,
     }, indent=2))
 
 

@@ -1,0 +1,142 @@
+"""Declarative query CLI: run JSON ``QuerySpec`` s against a TASTI index.
+
+Specs are the engine's JSON form — one query each, executed in order against
+a shared :class:`~repro.core.engine.QueryEngine` session, so later queries
+reuse earlier queries' oracle labels (and, with ``--crack``, every fresh
+annotation is folded back into the index):
+
+    PYTHONPATH=src python -m repro.launch.query \\
+        --workload night-street --n-frames 3000 --quick \\
+        --spec '{"kind": "aggregation", "score": "score_count", "err": 0.05}' \\
+        --spec '{"kind": "limit", "score": "score_rare", "k_results": 5}' \\
+        --crack
+
+Point ``--index`` at a saved index (see ``repro.launch.build_index``) to skip
+construction; otherwise a TASTI index is built in-process first.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.core.engine import QueryEngine, QuerySpec
+from repro.core.index import TastiIndex
+from repro.core.pipeline import TastiConfig, build_tasti
+from repro.core.queries.registry import registered_kinds
+from repro.core.schema import make_workload
+from repro.core.triplet import TripletConfig
+
+
+def _load_specs(args) -> list:
+    raw = []
+    if args.specs_file:
+        with open(args.specs_file) as f:
+            body = json.load(f)
+        if not isinstance(body, list):
+            raise SystemExit(f"--specs-file must hold a JSON list of specs, "
+                             f"got {type(body).__name__}")
+        raw.extend(body)
+    for s in args.spec or []:
+        raw.append(json.loads(s))
+    if not raw:
+        raise SystemExit("no queries: pass --spec JSON (repeatable) and/or "
+                         "--specs-file; known kinds: "
+                         f"{registered_kinds()}")
+    return [QuerySpec.from_dict(d) for d in raw]
+
+
+def _result_row(res) -> dict:
+    row = {
+        "kind": res.kind,
+        "n_invocations": res.n_invocations,
+        "n_oracle_fresh": res.n_oracle_fresh,
+        "n_oracle_cached": res.n_oracle_cached,
+        "n_cracked": res.n_cracked,
+        "query_cost_s": round(sum(res.cost.values()), 3),
+        "plan": res.plan.trace,
+    }
+    if res.estimate is not None:
+        row["estimate"] = round(res.estimate, 6)
+    if res.ci_half_width is not None:
+        row["ci_half_width"] = round(res.ci_half_width, 6)
+    if res.threshold is not None:
+        row["threshold"] = round(res.threshold, 6)
+    if res.selected is not None:
+        row["n_selected"] = int(len(res.selected))
+        row["selected_head"] = [int(i) for i in res.selected[:10]]
+    return row
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="execute declarative QuerySpecs against a TASTI index")
+    ap.add_argument("--workload", default="night-street",
+                    choices=["night-street", "taipei", "amsterdam", "wikisql"])
+    ap.add_argument("--n-frames", type=int, default=8000,
+                    help="records in the (synthetic) workload")
+    ap.add_argument("--index", default=None,
+                    help="path stem of a saved index to load; omit to build")
+    ap.add_argument("--variant", default="T", choices=["T", "PT"])
+    ap.add_argument("--n-train", type=int, default=400)
+    ap.add_argument("--n-reps", type=int, default=800)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--triplet-steps", type=int, default=400)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny build budgets (smoke tests / CI)")
+    ap.add_argument("--crack", action="store_true",
+                    help="fold every query's fresh annotations back into the "
+                         "index (cracking feedback loop, paper §3.3)")
+    ap.add_argument("--save-index", default=None,
+                    help="path stem to persist the (possibly cracked) index")
+    ap.add_argument("--spec", action="append",
+                    help="QuerySpec as JSON (repeatable, run in order)")
+    ap.add_argument("--specs-file", default=None,
+                    help="file holding a JSON list of QuerySpecs")
+    args = ap.parse_args(argv)
+
+    specs = _load_specs(args)
+    kw = ({"n_frames": args.n_frames} if args.workload != "wikisql"
+          else {"n_records": args.n_frames})
+    wl = make_workload(args.workload, **kw)
+
+    if args.index:
+        index = TastiIndex.load(args.index)
+        if index.n_records != len(wl.features):
+            raise SystemExit(
+                f"index covers {index.n_records} records but workload "
+                f"{wl.name} has {len(wl.features)}; pass matching --n-frames")
+    else:
+        if args.quick:
+            cfg = TastiConfig(n_train=100, n_reps=200, k=4,
+                              triplet=TripletConfig(steps=60, batch=128),
+                              pretrain_steps=40)
+        else:
+            cfg = TastiConfig(n_train=args.n_train, n_reps=args.n_reps,
+                              k=args.k,
+                              triplet=TripletConfig(steps=args.triplet_steps))
+        index = build_tasti(wl, cfg, variant=args.variant).index
+
+    engine = QueryEngine(index, wl, crack=args.crack)
+    rows = []
+    for spec in specs:
+        rows.append(_result_row(engine.execute(spec)))
+
+    if args.save_index:
+        index.save(args.save_index)
+
+    print(json.dumps({
+        "workload": wl.name,
+        "records": index.n_records,
+        "reps": index.n_reps,
+        "index_version": index.version,
+        "session": engine.stats,
+        "results": rows,
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

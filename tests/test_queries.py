@@ -97,6 +97,34 @@ def test_limit_query_exactness():
     assert all(truth[res.found_ids] == 1.0)
 
 
+def test_limit_query_trims_final_batch():
+    """Regression: the scan must stop *counting* at the record that yields the
+    Kth match, not at the end of its batch (pins the invocation count)."""
+    n = 1000
+    truth = np.zeros(n)
+    proxy = -np.arange(n, dtype=float)     # scan order = 0, 1, 2, ...
+    truth[:10] = 1.0                       # first 10 records all match
+    res = limit_query(proxy, lambda ids: truth[ids], k_results=10, batch=4)
+    assert res.n_invocations == 10         # was 12: full final batch counted
+    assert len(res.found_ids) == 10
+    np.testing.assert_array_equal(np.sort(res.found_ids), np.arange(10))
+    # Kth match mid-batch with non-matches interleaved
+    truth2 = np.zeros(n)
+    truth2[[0, 2, 5]] = 1.0
+    res2 = limit_query(proxy, lambda ids: truth2[ids], k_results=3, batch=4)
+    assert res2.n_invocations == 6         # records 0..5 examined, not 8
+
+
+def test_limit_query_respects_max_invocations():
+    n = 100
+    truth = np.zeros(n)
+    proxy = -np.arange(n, dtype=float)
+    res = limit_query(proxy, lambda ids: truth[ids], k_results=1, batch=16,
+                      max_invocations=10)
+    assert res.n_invocations == 10
+    assert len(res.found_ids) == 0
+
+
 def test_limit_query_bad_proxy_costs_more():
     rng = np.random.default_rng(3)
     n = 2000

@@ -97,7 +97,70 @@ def test_index_save_load_roundtrip(tmp_path):
     x = _embs(100, 8)
     idx = _build_index(x, n_reps=8, k=2)
     idx.save(str(tmp_path / "idx"))
+    # versioned JSON + npz only — no pickle on disk
+    assert (tmp_path / "idx.meta.json").exists()
+    assert not (tmp_path / "idx.ann.pkl").exists()
     idx2 = TastiIndex.load(str(tmp_path / "idx"))
     np.testing.assert_array_equal(idx.topk_ids, idx2.topk_ids)
     np.testing.assert_allclose(idx.topk_d2, idx2.topk_d2)
     assert idx2.annotations == idx.annotations
+
+
+def test_save_load_query_roundtrip_with_schema_annotations(tmp_path):
+    """Real annotations (Scene records) survive the JSON format, and the
+    reloaded index answers queries identically."""
+    from repro.core.engine import QueryEngine, QuerySpec
+    from repro.core.schema import make_workload
+
+    wl = make_workload("night-street", n_frames=600)
+    idx = TastiIndex.build(wl.features, 60, wl.target_dnn_batch, k=4,
+                           random_fraction=0.0, seed=0)
+    idx.crack([0, 1], wl.target_dnn_batch([0, 1]))  # non-zero version
+    idx.save(str(tmp_path / "ns"))
+    idx2 = TastiIndex.load(str(tmp_path / "ns"))
+    assert idx2.version == idx.version
+    assert idx2.cost.target_invocations == idx.cost.target_invocations
+    for a, b in zip(idx.annotations, idx2.annotations):
+        np.testing.assert_allclose(a.boxes, b.boxes)
+    r1 = QueryEngine(idx, wl).execute(
+        QuerySpec(kind="aggregation", score="score_count", err=0.1, seed=0))
+    r2 = QueryEngine(idx2, wl).execute(
+        QuerySpec(kind="aggregation", score="score_count", err=0.1, seed=0))
+    assert r1.estimate == pytest.approx(r2.estimate)
+    assert r1.n_invocations == r2.n_invocations
+
+
+def test_load_legacy_pickle_fallback(tmp_path):
+    """Pre-versioned indexes (.npz + .ann.pkl) still load, with a warning."""
+    import dataclasses
+    import pickle
+
+    x = _embs(100, 8)
+    idx = _build_index(x, n_reps=8, k=2)
+    stem = tmp_path / "old"
+    np.savez(stem.with_suffix(".npz"), embeddings=idx.embeddings,
+             rep_ids=idx.rep_ids, topk_d2=idx.topk_d2,
+             topk_ids=idx.topk_ids, k=np.int64(idx.k))
+    with open(stem.with_suffix(".ann.pkl"), "wb") as f:
+        pickle.dump({"annotations": idx.annotations,
+                     "cost": dataclasses.asdict(idx.cost)}, f)
+    with pytest.warns(DeprecationWarning, match="legacy pickle"):
+        idx2 = TastiIndex.load(str(stem))
+    assert idx2.annotations == idx.annotations
+    np.testing.assert_allclose(idx2.topk_d2, idx.topk_d2)
+    # re-saving migrates to the safe format and drops the stale pickle
+    idx2.save(str(stem))
+    assert stem.with_suffix(".meta.json").exists()
+    assert not stem.with_suffix(".ann.pkl").exists()
+
+
+def test_crack_bumps_version_only_on_mutation():
+    x = _embs(200, 8)
+    idx = _build_index(x, n_reps=16, k=4)
+    assert idx.version == 0
+    pool = np.setdiff1d(np.arange(len(x)), idx.rep_ids)
+    idx.crack(pool[:3], [float(i) for i in pool[:3]])
+    assert idx.version == 1
+    # cracking with only existing reps is a no-op: no version bump
+    idx.crack(idx.rep_ids[:2], [0.0, 0.0])
+    assert idx.version == 1
