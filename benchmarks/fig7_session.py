@@ -1,0 +1,60 @@
+"""Session sharing: the same specs executed as one jointly-planned
+``QuerySession`` vs in isolation (fresh engine per spec, no shared cache).
+
+A session of >=3 specs over one score function shares the stratified sample
+across its aggregations, prefetches every spec's certain first requests
+through the oracle broker (one combined ``target_dnn_batch`` flush), and
+dedups across specs — so it must issue strictly fewer fresh target-DNN
+records than the isolated runs.  Metric: fresh labeled records (the paper's
+query cost) and oracle microbatches."""
+import numpy as np
+
+from benchmarks import common
+from repro.core.engine import QueryEngine, QuerySpec
+from repro.core.session import QuerySession
+
+
+def _specs(quick: bool):
+    budget = 250 if quick else 400
+    return [
+        QuerySpec(kind="aggregation", score="score_has_object",
+                  err=0.1 if quick else 0.08, seed=0),
+        QuerySpec(kind="aggregation", score="score_has_object",
+                  err=0.06 if quick else 0.04, seed=1),
+        QuerySpec(kind="selection", score="score_has_object",
+                  budget=budget, seed=0),
+        QuerySpec(kind="limit", score="score_has_object", k_results=5),
+    ]
+
+
+def run(quick: bool = False):
+    rows = []
+    for ds in ("night-street", "taipei"):
+        wl = common.get_workload(ds, quick)
+        system = common.get_tasti(ds, "T", quick)
+        specs = _specs(quick)
+
+        # isolated: a fresh engine per spec — no shared cache, no session
+        iso = [QueryEngine(system.index, wl).execute(s) for s in specs]
+        iso_fresh = sum(r.n_oracle_fresh for r in iso)
+
+        # shared: one session over one engine
+        out = QuerySession(QueryEngine(system.index, wl), specs).execute()
+        sess_fresh = out.stats["fresh_total"]
+
+        for i, (spec, ri, rs) in enumerate(zip(specs, iso, out.results)):
+            rows.append((f"fig7/{ds}/spec{i}_{spec.kind}/isolated",
+                         "fresh_records", ri.n_oracle_fresh))
+            rows.append((f"fig7/{ds}/spec{i}_{spec.kind}/session",
+                         "fresh_records", rs.n_oracle_fresh))
+        rows.append((f"fig7/{ds}/isolated", "fresh_records", iso_fresh))
+        rows.append((f"fig7/{ds}/session", "fresh_records", sess_fresh))
+        rows.append((f"fig7/{ds}/session", "oracle_batches",
+                     out.stats["oracle_batches"]))
+        rows.append((f"fig7/{ds}/savings", "pct",
+                     round(100.0 * (1.0 - sess_fresh / max(iso_fresh, 1)), 1)))
+        if sess_fresh >= iso_fresh:
+            raise AssertionError(
+                f"{ds}: session issued {sess_fresh} fresh records, isolated "
+                f"issued {iso_fresh} — sharing must strictly reduce cost")
+    return rows

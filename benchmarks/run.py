@@ -13,7 +13,8 @@ import traceback
 
 MODULES = [
     "fig2_construction", "fig3_cost_vs_quality", "fig4_aggregation",
-    "fig5_supg", "fig6_limit", "fig7_position_selection", "fig8_avg_position",
+    "fig5_supg", "fig6_limit", "fig7_position_selection", "fig7_session",
+    "fig8_avg_position",
     "table1_no_guarantees", "table2_cracking", "fig9_factor_analysis",
     "fig10_lesion", "fig11_buckets", "fig12_train_examples",
     "fig13_embedding_size",

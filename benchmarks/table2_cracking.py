@@ -1,13 +1,16 @@
 """Table 2: cracking — run one query with the engine's cracking feedback loop
 enabled (``QuerySpec(crack=True)`` folds its target-DNN invocations back into
-the index), run the second query; report before/after.  Fresh systems per
-cell because cracking mutates the index."""
+the index), run the second query; report before/after.  Each cell executes
+as one mid-session-cracking ``QuerySession`` (specs keep
+``reuse_labels=False`` so before/after invocation counts stay comparable);
+fresh systems per cell because cracking mutates the index."""
 import numpy as np
 
 from benchmarks import common
 from repro.core.engine import QuerySpec
 from repro.core.pipeline import build_tasti
 from repro.core.queries.selection import false_positive_rate
+from repro.core.session import QuerySession
 
 
 def run(quick: bool = False):
@@ -17,36 +20,35 @@ def run(quick: bool = False):
         truth_cnt = common.truth_vector(wl, "score_count")
         truth_sel = truth_cnt > 0
 
-        def supg_spec(seed):
+        def supg_spec(seed, crack=False):
             return QuerySpec(kind="selection", score="score_has_object",
-                             budget=400, seed=seed, reuse_labels=False)
+                             budget=400, seed=seed, crack=crack,
+                             reuse_labels=False)
 
         def agg_spec(seed, crack=False):
             return QuerySpec(kind="aggregation", score="score_count",
                              err=0.05, seed=seed, crack=crack,
                              reuse_labels=False)
 
-        # --- agg then SUPG ---
+        # --- agg (cracks mid-session) then SUPG ---
         eng = build_tasti(wl, common.tasti_cfg(quick), variant="T").engine
-        fpr_before = false_positive_rate(
-            eng.execute(supg_spec(0)).selected, truth_sel)
-        eng.execute(agg_spec(0, crack=True))   # cracks its samples back in
-        fpr_after = false_positive_rate(
-            eng.execute(supg_spec(0)).selected, truth_sel)
+        out = QuerySession(
+            eng, [supg_spec(0), agg_spec(0, crack=True), supg_spec(0)]
+        ).execute()
+        fpr_before = false_positive_rate(out.results[0].selected, truth_sel)
+        fpr_after = false_positive_rate(out.results[2].selected, truth_sel)
         rows.append((f"table2/{ds}/agg_then_supg_before", "fpr",
                      round(fpr_before, 4)))
         rows.append((f"table2/{ds}/agg_then_supg_after", "fpr",
                      round(fpr_after, 4)))
 
-        # --- SUPG then agg ---
+        # --- SUPG (cracks mid-session) then agg ---
         eng2 = build_tasti(wl, common.tasti_cfg(quick), variant="T").engine
-        n_before = eng2.execute(agg_spec(1)).n_invocations
-        eng2.execute(QuerySpec(kind="selection", score="score_has_object",
-                               budget=400, seed=1, crack=True,
-                               reuse_labels=False))
-        n_after = eng2.execute(agg_spec(1)).n_invocations
+        out2 = QuerySession(
+            eng2, [agg_spec(1), supg_spec(1, crack=True), agg_spec(1)]
+        ).execute()
         rows.append((f"table2/{ds}/supg_then_agg_before", "invocations",
-                     n_before))
+                     out2.results[0].n_invocations))
         rows.append((f"table2/{ds}/supg_then_agg_after", "invocations",
-                     n_after))
+                     out2.results[2].n_invocations))
     return rows

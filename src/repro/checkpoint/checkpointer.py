@@ -32,7 +32,9 @@ from repro.models.common import PyTree
 
 
 def _flatten_with_names(tree: PyTree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on newer jax; the tree_util
+    # spelling works everywhere
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in path) for path, _ in flat]
     return names, [v for _, v in flat], treedef

@@ -1,0 +1,223 @@
+"""Oracle broker: batched, deduplicating access to the target DNN.
+
+TASTI's cost metric is target-DNN invocations (paper §5-6), so the system
+layer between executors and the workload should never label a record twice
+and should hand the (expensive, batch-friendly) target DNN work in
+well-shaped microbatches.  :class:`OracleBroker` owns exactly that seam:
+
+* **microbatching** — label requests accumulate in an ordered pending queue
+  and are flushed to ``target_dnn_batch`` in chunks of ``max_batch``
+  (flush-on-demand: a blocking read drains the queue);
+* **dedup** — ids already cached, or already in flight for another consumer,
+  are never re-labeled; the second requester rides along for free;
+* **two consumption styles** — a blocking :meth:`fetch` for executors that
+  need labels now, and a futures-style :meth:`request`/:class:`LabelFuture`
+  pair plus :meth:`prefetch` so several query specs can enqueue their samples
+  first and amortize one combined flush (how
+  :class:`~repro.core.session.QuerySession` shares batches across specs);
+* **per-consumer accounting** — each :class:`OracleAccount` (one per query
+  spec) tracks exactly the fresh labels it caused and the cache hits it was
+  served, so per-spec invocation counts stay honest under cross-spec dedup:
+  a record labeled for spec A is *fresh* for A and *cached* for B.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+
+@dataclass
+class OracleAccount:
+    """Per-consumer (per query spec) oracle accounting.
+
+    ``fresh`` counts records the target DNN labeled *because of this
+    consumer*; ``cached`` counts requests served from the shared cache (or
+    from another consumer's in-flight batch).  ``labeled`` lists the fresh
+    ids in labeling order — the cracking feedback loop folds exactly these
+    back into the index.
+    """
+    name: str = ""
+    fresh: int = 0
+    cached: int = 0
+    labeled: List[int] = field(default_factory=list)
+    # ids this account pre-paid via prefetch(); the first demand-read of each
+    # is free (the fresh charge already happened at flush time)
+    _credit: Set[int] = field(default_factory=set)
+
+
+class LabelFuture:
+    """Handle to labels that may not have been computed yet.
+
+    ``result()`` drains the broker's pending queue if needed (flush-on-
+    demand) and returns the annotations in request order.
+    """
+
+    def __init__(self, broker: "OracleBroker", ids: np.ndarray):
+        self._broker = broker
+        self._ids = [int(i) for i in ids]
+
+    def done(self) -> bool:
+        return all(i in self._broker.cache for i in self._ids)
+
+    def result(self) -> List[Any]:
+        if not self.done():
+            self._broker.flush()
+        return [self._broker.cache[i] for i in self._ids]
+
+
+class OracleBroker:
+    """Batches, dedups, and accounts for target-DNN label requests.
+
+    ``annotate(ids) -> list`` is the raw oracle (``workload.
+    target_dnn_batch``); every call to it goes through :meth:`flush` in
+    chunks of at most ``max_batch`` ids.
+    """
+
+    def __init__(self, annotate: Callable[[np.ndarray], Sequence[Any]],
+                 max_batch: int = 64,
+                 cache: Optional[Dict[int, Any]] = None):
+        if max_batch <= 0:
+            raise ValueError(f"max_batch must be positive, got {max_batch}")
+        self.annotate = annotate
+        self.max_batch = int(max_batch)
+        self.cache: Dict[int, Any] = {} if cache is None else cache
+        self._pending: Dict[int, Optional[OracleAccount]] = {}  # id -> owner
+        self.stats: Dict[str, int] = {
+            "requests": 0,        # ids seen by request()/fetch()
+            "fresh": 0,           # records actually labeled
+            "cached": 0,          # requests served without labeling
+            "dedup_inflight": 0,  # requests that rode an in-flight id
+            "batches": 0,         # target_dnn_batch calls issued
+            "flushes": 0,         # flush() calls that did work
+            "max_pending": 0,     # high-water mark of the pending queue
+            "prefetched": 0,      # ids enqueued via prefetch()
+        }
+
+    def account(self, name: str = "") -> OracleAccount:
+        return OracleAccount(name=name)
+
+    # -- enqueue -------------------------------------------------------------
+    def request(self, ids, account: Optional[OracleAccount] = None
+                ) -> LabelFuture:
+        """Enqueue ``ids`` (dedup against cache and in-flight) and return a
+        future.  Charges ``account.cached`` for every id somebody else
+        already paid for; fresh charges land at flush time on the consumer
+        that caused the labeling."""
+        ids = np.asarray(ids, np.int64).ravel()
+        self.stats["requests"] += len(ids)
+        for raw in ids:
+            i = int(raw)
+            if i in self.cache:
+                if account is not None and i in account._credit:
+                    account._credit.discard(i)  # pre-paid by prefetch
+                else:
+                    self.stats["cached"] += 1
+                    if account is not None:
+                        account.cached += 1
+            elif i in self._pending:
+                if account is not None and i in account._credit:
+                    # own unflushed prefetch: this demand-read consumes the
+                    # credit; the fresh charge lands at flush
+                    account._credit.discard(i)
+                else:
+                    self.stats["cached"] += 1
+                    self.stats["dedup_inflight"] += 1
+                    if account is not None:
+                        account.cached += 1
+            else:
+                self._pending[i] = account
+        self.stats["max_pending"] = max(self.stats["max_pending"],
+                                        len(self._pending))
+        return LabelFuture(self, ids)
+
+    def prefetch(self, ids, account: Optional[OracleAccount] = None) -> int:
+        """Enqueue ``ids`` without charging anything yet.  Ids already cached
+        or in flight are skipped (cross-spec dedup); newly enqueued ids are
+        credited to ``account`` so its later demand-read is free.  Returns
+        the number of ids actually enqueued."""
+        ids = np.asarray(ids, np.int64).ravel()
+        enqueued = 0
+        for raw in ids:
+            i = int(raw)
+            if i in self.cache or i in self._pending:
+                continue
+            self._pending[i] = account
+            if account is not None:
+                account._credit.add(i)
+            enqueued += 1
+        self.stats["prefetched"] += enqueued
+        self.stats["max_pending"] = max(self.stats["max_pending"],
+                                        len(self._pending))
+        return enqueued
+
+    # -- consume -------------------------------------------------------------
+    def fetch(self, ids, account: Optional[OracleAccount] = None,
+              reuse: bool = True) -> List[Any]:
+        """Blocking read: labels for ``ids`` in order.
+
+        ``reuse=False`` bypasses the cache *reads* entirely — every id is
+        re-labeled and charged fresh (method-vs-method benchmarks count every
+        invocation) — but results still land in the cache for later
+        consumers.
+        """
+        ids = np.asarray(ids, np.int64).ravel()
+        if reuse:
+            return self.request(ids, account=account).result()
+        self.stats["requests"] += len(ids)
+        for start in range(0, len(ids), self.max_batch):
+            chunk = ids[start:start + self.max_batch]
+            anns = self.annotate(chunk)
+            self.stats["batches"] += 1
+            for i, a in zip(chunk, anns):
+                self.cache[int(i)] = a
+        self.stats["fresh"] += len(ids)
+        if account is not None:
+            account.fresh += len(ids)
+            account.labeled.extend(int(i) for i in ids)
+        if len(ids):
+            self.stats["flushes"] += 1
+        return [self.cache[int(i)] for i in ids]
+
+    # -- drain ---------------------------------------------------------------
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> int:
+        """Label everything pending, in microbatches of ``max_batch``.
+        Fresh charges land on the account that enqueued each id.  Returns
+        the number of records labeled."""
+        if not self._pending:
+            return 0
+        queued = list(self._pending.items())  # insertion order
+        self._pending.clear()
+        pending = []
+        for i, owner in queued:
+            # a forced fetch() may have labeled a pending id in the meantime:
+            # the enqueuer is served from cache, not charged fresh
+            if i in self.cache:
+                if owner is not None and i in owner._credit:
+                    owner._credit.discard(i)  # demand read will charge cached
+                else:
+                    self.stats["cached"] += 1
+                    if owner is not None:
+                        owner.cached += 1
+            else:
+                pending.append((i, owner))
+        if not pending:
+            return 0
+        for start in range(0, len(pending), self.max_batch):
+            chunk = pending[start:start + self.max_batch]
+            chunk_ids = np.asarray([i for i, _ in chunk], np.int64)
+            anns = self.annotate(chunk_ids)
+            self.stats["batches"] += 1
+            for (i, owner), a in zip(chunk, anns):
+                self.cache[i] = a
+                self.stats["fresh"] += 1
+                if owner is not None:
+                    owner.fresh += 1
+                    owner.labeled.append(i)
+        self.stats["flushes"] += 1
+        return len(pending)

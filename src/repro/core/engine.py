@@ -35,6 +35,7 @@ from typing import Any, Callable, Dict, List, Optional, Union
 import numpy as np
 
 from repro.core import propagation, schema as schema_lib
+from repro.core.broker import OracleAccount, OracleBroker
 from repro.core.index import TastiIndex
 # importing the package registers the built-in executors
 from repro.core import queries as _queries  # noqa: F401
@@ -119,6 +120,9 @@ class QueryPlan:
     score_key: Any                   # proxy/label cache key
     crack: bool
     trace: List[str] = field(default_factory=list)
+    # session-injected sample order shared across specs over the same score
+    # (any prefix is stratified over proxy-score strata); None = spec default
+    shared_order: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -136,6 +140,8 @@ class QueryResult:
     cost: Dict[str, float]           # modeled query-time cost breakdown
     plan: QueryPlan
     raw: Any                         # kind-specific result (AggResult, ...)
+    session: Optional[Dict[str, Any]] = None  # session-level accounting
+                                              # (set by QuerySession)
 
 
 # ---------------------------------------------------------------------------
@@ -150,13 +156,15 @@ class QueryEngine:
     """
 
     def __init__(self, index: TastiIndex, workload: Any = None,
-                 crack: bool = False):
+                 crack: bool = False, max_oracle_batch: int = 64,
+                 broker: Optional[OracleBroker] = None):
         self.index = index
         self.workload = workload
         self.crack_by_default = bool(crack)
+        self.max_oracle_batch = int(max_oracle_batch)
         self._proxy_cache: Dict[Any, np.ndarray] = {}
         self._proxy_cache_version = index.version
-        self._label_cache: Dict[int, Any] = {}
+        self._broker = broker
         self.stats: Dict[str, int] = {
             "propagation_computes": 0,
             "proxy_cache_hits": 0,
@@ -164,6 +172,26 @@ class QueryEngine:
             "label_cache_hits": 0,
             "cracked_records": 0,
         }
+
+    # -- oracle broker -------------------------------------------------------
+    def _annotate(self, ids: np.ndarray):
+        if self.workload is None:
+            raise ValueError("labeling records requires a workload "
+                             "(the target-DNN oracle)")
+        return self.workload.target_dnn_batch(np.asarray(ids, np.int64))
+
+    @property
+    def broker(self) -> OracleBroker:
+        """The batched, deduplicating seam to ``workload.target_dnn_batch``;
+        its cache is the engine's shared oracle-label cache."""
+        if self._broker is None:
+            self._broker = OracleBroker(self._annotate,
+                                        max_batch=self.max_oracle_batch)
+        return self._broker
+
+    @property
+    def _label_cache(self) -> Dict[int, Any]:
+        return self.broker.cache
 
     # -- proxy scores (memoized propagation) ---------------------------------
     def _score_fn(self, score: Union[str, Callable]) -> Callable:
@@ -224,29 +252,16 @@ class QueryEngine:
 
     # -- oracle with the shared label cache ----------------------------------
     def _make_oracle(self, score_fn: Callable, reuse: bool,
-                     counters: Dict[str, int],
-                     labeled: List[int]) -> Callable[[np.ndarray], np.ndarray]:
-        """Wrap the workload target DNN: cache annotations by record id so a
-        record labeled for one query is free for every later one."""
-        wl = self.workload
+                     account: OracleAccount
+                     ) -> Callable[[np.ndarray], np.ndarray]:
+        """Wrap the broker for one query: blocking calls return scores.
+        Sessions enqueue ahead of execution through the broker's futures API
+        (``request``/``prefetch``) against the same account."""
+        broker = self.broker
 
         def call(ids) -> np.ndarray:
-            ids = np.asarray(ids, np.int64)
-            if reuse:
-                missing = np.unique(np.asarray(
-                    [i for i in ids if int(i) not in self._label_cache],
-                    np.int64))
-            else:
-                missing = ids
-            if len(missing):
-                anns = wl.target_dnn_batch(missing)
-                for i, a in zip(missing, anns):
-                    self._label_cache[int(i)] = a
-                labeled.extend(int(i) for i in missing)
-            counters["fresh"] += len(missing)
-            counters["cached"] += len(ids) - len(missing)
-            return np.asarray([score_fn(self._label_cache[int(i)])
-                               for i in ids], np.float64)
+            anns = broker.fetch(ids, account=account, reuse=reuse)
+            return np.asarray([score_fn(a) for a in anns], np.float64)
 
         return call
 
@@ -284,12 +299,9 @@ class QueryEngine:
                          crack=crack, trace=trace)
 
     # -- execute -------------------------------------------------------------
-    def execute(self, spec_or_plan: Union[QuerySpec, QueryPlan]) -> QueryResult:
-        plan = (spec_or_plan if isinstance(spec_or_plan, QueryPlan)
-                else self.plan(spec_or_plan))
-        # each execution owns its trace: re-executing a caller-held plan must
-        # not mutate it (or earlier results that share it)
-        plan = dataclasses.replace(plan, trace=list(plan.trace))
+    def proxy_for(self, plan: QueryPlan) -> np.ndarray:
+        """The proxy array ``plan`` will execute against (external override,
+        or memoized propagation, clipped when the kind requires it)."""
         spec = plan.spec
         if spec.proxy is not None:
             proxy = np.asarray(spec.proxy, np.float64)
@@ -299,6 +311,20 @@ class QueryEngine:
                                       score_key=spec.score_key)
         if plan.clip01:
             proxy = np.clip(proxy, 0.0, 1.0)
+        return proxy
+
+    def execute(self, spec_or_plan: Union[QuerySpec, QueryPlan],
+                account: Optional[OracleAccount] = None) -> QueryResult:
+        """Run one query.  ``account`` carries the oracle accounting; a
+        session passes one per spec (pre-charged by its prefetch phase) so
+        per-spec fresh/cached counts stay exact under cross-spec dedup."""
+        plan = (spec_or_plan if isinstance(spec_or_plan, QueryPlan)
+                else self.plan(spec_or_plan))
+        # each execution owns its trace: re-executing a caller-held plan must
+        # not mutate it (or earlier results that share it)
+        plan = dataclasses.replace(plan, trace=list(plan.trace))
+        spec = plan.spec
+        proxy = self.proxy_for(plan)
 
         if self.workload is None:
             raise ValueError("executing queries requires a workload "
@@ -308,23 +334,25 @@ class QueryEngine:
         if score_fn is None:
             raise ValueError(f"{spec.kind} spec needs `score` to build the "
                              "target-DNN oracle")
-        counters = {"fresh": 0, "cached": 0}
-        labeled: List[int] = []
-        oracle = self._make_oracle(score_fn, spec.reuse_labels, counters,
-                                   labeled)
+        acct = account if account is not None else \
+            self.broker.account(name=spec.kind)
+        fresh0, cached0 = acct.fresh, acct.cached
+        oracle = self._make_oracle(score_fn, spec.reuse_labels, acct)
 
         raw = plan.executor.execute(plan, proxy, oracle)
         summary = plan.executor.summarize(raw)
 
         n_cracked = 0
-        if plan.crack and labeled:
-            n_cracked = self.crack_with(labeled)
+        if plan.crack and acct.labeled:
+            n_cracked = self.crack_with(acct.labeled)
             plan.trace.append(f"cracked {n_cracked} new reps into the index")
 
-        self.stats["label_fresh"] += counters["fresh"]
-        self.stats["label_cache_hits"] += counters["cached"]
+        # session-prefetched labels were already folded into engine.stats by
+        # the session; only the execution delta lands here
+        self.stats["label_fresh"] += acct.fresh - fresh0
+        self.stats["label_cache_hits"] += acct.cached - cached0
         cost = {
-            "target_dnn_s": counters["fresh"] * schema_lib.TARGET_DNN_COST_S,
+            "target_dnn_s": acct.fresh * schema_lib.TARGET_DNN_COST_S,
             "crack_distance_s": (n_cracked * self.index.n_records
                                  * schema_lib.DIST_COST_S),
         }
@@ -335,8 +363,8 @@ class QueryEngine:
             threshold=summary.get("threshold"),
             ci_half_width=summary.get("ci_half_width"),
             n_invocations=int(summary["n_invocations"]),
-            n_oracle_fresh=counters["fresh"],
-            n_oracle_cached=counters["cached"],
+            n_oracle_fresh=acct.fresh,
+            n_oracle_cached=acct.cached,
             n_cracked=n_cracked,
             cost=cost,
             plan=plan,
@@ -355,10 +383,10 @@ class QueryEngine:
         missing = np.asarray([i for i in ids if int(i) not in self._label_cache],
                              np.int64)
         if len(missing):
-            if self.workload is None:
-                raise ValueError("cracking unlabeled ids requires a workload")
-            for i, a in zip(missing, self.workload.target_dnn_batch(missing)):
-                self._label_cache[int(i)] = a
+            # through the broker: microbatched and counted like every other
+            # oracle call
+            self.broker.fetch(missing)
+            self.stats["label_fresh"] += len(missing)
         before = self.index.n_reps
         self.index.crack(ids, [self._label_cache[int(i)] for i in ids])
         added = self.index.n_reps - before

@@ -25,6 +25,7 @@ from repro.core.baselines import pretrain_embedder
 from repro.core.embedder import EmbedderConfig, embed_all, init_embedder
 from repro.core.engine import QueryEngine, QueryResult, QuerySpec
 from repro.core.fpf import fpf_select
+from repro.core.session import QuerySession, SessionResult
 from repro.core.index import IndexCost, TastiIndex
 from repro.core.triplet import TripletConfig, mine_triplets, train_embedder
 
@@ -67,6 +68,15 @@ class TastiSystem:
 
     def execute(self, spec: QuerySpec) -> QueryResult:
         return self.engine.execute(spec)
+
+    def session(self, specs=None, **kw) -> QuerySession:
+        """A multi-query session over this system's engine: joint planning,
+        broker-prefetched labels, combined budget (see
+        :mod:`repro.core.session`)."""
+        return QuerySession(self.engine, specs, **kw)
+
+    def execute_session(self, specs, **kw) -> SessionResult:
+        return self.session(specs, **kw).execute()
 
     # -- paper §4: query-specific proxy scores (legacy shim) -------------
     def proxy_scores(self, score_fn: Callable[[Any], float],

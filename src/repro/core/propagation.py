@@ -28,9 +28,10 @@ def propagate_categorical(rep_scores: np.ndarray, topk_ids: np.ndarray,
     w = 1.0 / (np.sqrt(np.maximum(topk_d2, 0.0)) + eps)
     cls = rep_scores[topk_ids].astype(np.int64)           # (N,k)
     n = len(topk_ids)
-    votes = np.zeros((n, n_classes))
-    for j in range(topk_ids.shape[1]):
-        np.add.at(votes, (np.arange(n), cls[:, j]), w[:, j])
+    # one scatter-add over the flattened (record, class) grid
+    flat = np.arange(n, dtype=np.int64)[:, None] * n_classes + cls
+    votes = np.bincount(flat.ravel(), weights=w.ravel(),
+                        minlength=n * n_classes).reshape(n, n_classes)
     return votes.argmax(1)
 
 

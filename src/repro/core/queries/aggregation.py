@@ -32,21 +32,43 @@ def eb_half_width(var: float, rng_width: float, n: int, delta: float) -> float:
                  + 3.0 * rng_width * log_term / n)
 
 
+def sample_order(n: int, seed: int,
+                 shared: Optional[np.ndarray] = None) -> np.ndarray:
+    """The id order an aggregation walks: the session-shared sample order
+    when given (so specs over the same score draw nested samples), else a
+    seeded uniform permutation."""
+    if shared is not None:
+        order = np.asarray(shared, np.int64)
+        if len(order) != n:
+            raise ValueError(f"shared sample order covers {len(order)} "
+                             f"records, proxy has {n}")
+        return order
+    return np.random.default_rng(seed).permutation(n)
+
+
+def first_sample_size(n: int, min_samples: int,
+                      max_samples: Optional[int]) -> int:
+    """Size of the first (deterministic) oracle batch of the EB loop."""
+    return min(min_samples, max_samples or n, n)
+
+
 def aggregate_control_variates(proxy: np.ndarray,
                                oracle: Callable[[np.ndarray], np.ndarray],
                                err: float, delta: float = 0.05,
                                batch: int = 32, min_samples: int = 64,
                                max_samples: Optional[int] = None,
                                seed: int = 0,
-                               use_cv: bool = True) -> AggResult:
+                               use_cv: bool = True,
+                               order: Optional[np.ndarray] = None) -> AggResult:
     """Sample until the EB CI half-width <= err (absolute).
 
     ``oracle(ids) -> f values`` counts as target-DNN invocations.
     ``use_cv=False`` gives the plain random-sampling baseline.
+    ``order`` overrides the sampling order (sessions pass a shared
+    stratified order so sibling specs' samples nest).
     """
     n = len(proxy)
-    rng = np.random.default_rng(seed)
-    order = rng.permutation(n)
+    order = sample_order(n, seed, shared=order)
     max_samples = max_samples or n
     p_mean = float(proxy.mean())
 
@@ -103,12 +125,18 @@ class AggregationExecutor(QueryExecutor):
         if spec.err <= 0:
             raise ValueError("aggregation needs a positive error bound `err`")
 
+    def preview(self, plan, proxy) -> np.ndarray:
+        s = plan.spec
+        order = sample_order(len(proxy), s.seed, shared=plan.shared_order)
+        return order[:first_sample_size(len(proxy), s.min_samples,
+                                        s.max_samples)]
+
     def execute(self, plan, proxy, oracle) -> AggResult:
         s = plan.spec
         return aggregate_control_variates(
             proxy, oracle, err=s.err, delta=s.delta, batch=s.batch or 32,
             min_samples=s.min_samples, max_samples=s.max_samples,
-            seed=s.seed, use_cv=s.use_cv)
+            seed=s.seed, use_cv=s.use_cv, order=plan.shared_order)
 
     def summarize(self, raw: AggResult) -> dict:
         return {"estimate": raw.estimate, "ci_half_width": raw.ci_half_width,

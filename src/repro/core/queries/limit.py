@@ -19,12 +19,17 @@ class LimitResult:
     examined_ids: np.ndarray
 
 
+def scan_order(proxy: np.ndarray) -> np.ndarray:
+    """Deterministic descending-proxy visit order of the limit scan."""
+    return np.argsort(-proxy, kind="stable")
+
+
 def limit_query(proxy: np.ndarray,
                 oracle: Callable[[np.ndarray], np.ndarray],
                 k_results: int, batch: int = 16,
                 max_invocations: int = 0) -> LimitResult:
     n = len(proxy)
-    order = np.argsort(-proxy, kind="stable")
+    order = scan_order(proxy)
     max_inv = max_invocations or n
     found: list = []
     examined = 0
@@ -66,6 +71,13 @@ class LimitExecutor(QueryExecutor):
     def validate(self, spec) -> None:
         if not spec.k_results or spec.k_results <= 0:
             raise ValueError("limit needs a positive `k_results`")
+
+    def preview(self, plan, proxy) -> np.ndarray:
+        # only the first batch is certain: the scan stops as soon as the Kth
+        # match lands, so prefetching deeper would speculate with real labels
+        s = plan.spec
+        first = min(s.batch or 16, s.max_invocations or len(proxy))
+        return scan_order(proxy)[:first]
 
     def execute(self, plan, proxy, oracle) -> LimitResult:
         s = plan.spec

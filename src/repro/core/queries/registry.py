@@ -41,6 +41,16 @@ class QueryExecutor:
     def validate(self, spec) -> None:
         """Raise ``ValueError`` if ``spec`` is not executable for this kind."""
 
+    def preview(self, plan: "QueryPlan", proxy: np.ndarray) -> np.ndarray:
+        """Record ids this plan will deterministically request first.
+
+        Sessions prefetch these through the oracle broker before executing
+        any spec, so one combined ``target_dnn_batch`` flush serves many
+        specs.  Must be a *certain* prefix of the execution's requests (no
+        speculation — prefetched labels are charged to the spec).  Default:
+        nothing to prefetch."""
+        return np.empty(0, np.int64)
+
     def execute(self, plan: "QueryPlan", proxy: np.ndarray,
                 oracle: Callable[[np.ndarray], np.ndarray]):
         """Run the plan.  Returns the kind-specific raw result object;

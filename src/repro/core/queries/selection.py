@@ -26,17 +26,27 @@ class SUPGResult:
     sampled_labels: np.ndarray
 
 
-def supg_recall_target(proxy: np.ndarray,
-                       oracle: Callable[[np.ndarray], np.ndarray],
-                       budget: int, recall_target: float = 0.9,
-                       delta: float = 0.05, seed: int = 0) -> SUPGResult:
+def importance_sample(proxy: np.ndarray, budget: int, seed: int = 0):
+    """SUPG's sqrt-proxy importance sample: (sampled ids, p, q).
+
+    Deterministic in (proxy, budget, seed) — sessions call this ahead of
+    execution to prefetch exactly the ids the query will label."""
     n = len(proxy)
     rng = np.random.default_rng(seed)
     p = np.clip(proxy.astype(np.float64), 1e-6, 1.0)
     q = np.sqrt(p)
     q = q / q.sum()
+    ids = rng.choice(n, size=min(budget, n), replace=True, p=q)
+    return ids, p, q
+
+
+def supg_recall_target(proxy: np.ndarray,
+                       oracle: Callable[[np.ndarray], np.ndarray],
+                       budget: int, recall_target: float = 0.9,
+                       delta: float = 0.05, seed: int = 0) -> SUPGResult:
+    n = len(proxy)
     budget = min(budget, n)
-    ids = rng.choice(n, size=budget, replace=True, p=q)
+    ids, p, q = importance_sample(proxy, budget, seed)
     labels = oracle(ids).astype(np.float64)  # 1.0 if matches predicate
     w = 1.0 / (n * q[ids])                    # importance weights (mean-1 scale)
 
@@ -105,6 +115,11 @@ class SelectionExecutor(QueryExecutor):
             raise ValueError("selection needs a positive oracle `budget`")
         if not (0.0 < spec.recall_target <= 1.0):
             raise ValueError("recall_target must be in (0, 1]")
+
+    def preview(self, plan, proxy) -> np.ndarray:
+        s = plan.spec
+        ids, _, _ = importance_sample(proxy, s.budget, s.seed)
+        return np.unique(ids)
 
     def execute(self, plan, proxy, oracle) -> SUPGResult:
         s = plan.spec

@@ -1,15 +1,19 @@
 """Declarative query CLI: run JSON ``QuerySpec`` s against a TASTI index.
 
-Specs are the engine's JSON form — one query each, executed in order against
-a shared :class:`~repro.core.engine.QueryEngine` session, so later queries
-reuse earlier queries' oracle labels (and, with ``--crack``, every fresh
-annotation is folded back into the index):
+Specs are the engine's JSON form — one query each.  By default the whole
+list executes as one :class:`~repro.core.session.QuerySession`: specs over
+the same score are planned jointly (propagation once per mode, shared
+stratified sample for aggregations), their first samples are prefetched
+through the oracle broker in combined microbatches, and the output reports
+per-spec *and* session-level label accounting.  ``--isolated`` falls back to
+executing specs one-by-one (shared label cache only); with ``--crack``,
+every fresh annotation is folded back into the index either way:
 
     PYTHONPATH=src python -m repro.launch.query \\
         --workload night-street --n-frames 3000 --quick \\
         --spec '{"kind": "aggregation", "score": "score_count", "err": 0.05}' \\
         --spec '{"kind": "limit", "score": "score_rare", "k_results": 5}' \\
-        --crack
+        --session-budget 2000 --oracle-batch 64 --crack
 
 Point ``--index`` at a saved index (see ``repro.launch.build_index``) to skip
 construction; otherwise a TASTI index is built in-process first.
@@ -28,6 +32,7 @@ from repro.core.index import TastiIndex
 from repro.core.pipeline import TastiConfig, build_tasti
 from repro.core.queries.registry import registered_kinds
 from repro.core.schema import make_workload
+from repro.core.session import QuerySession
 from repro.core.triplet import TripletConfig
 
 
@@ -68,6 +73,8 @@ def _result_row(res) -> dict:
     if res.selected is not None:
         row["n_selected"] = int(len(res.selected))
         row["selected_head"] = [int(i) for i in res.selected[:10]]
+    if res.session is not None:
+        row["session"] = res.session
     return row
 
 
@@ -90,6 +97,15 @@ def main(argv=None) -> None:
     ap.add_argument("--crack", action="store_true",
                     help="fold every query's fresh annotations back into the "
                          "index (cracking feedback loop, paper §3.3)")
+    ap.add_argument("--isolated", action="store_true",
+                    help="execute specs one-by-one instead of as a jointly-"
+                         "planned session (shared label cache only)")
+    ap.add_argument("--session-budget", type=int, default=None,
+                    help="combined worst-case oracle budget for the session "
+                         "(allocated across specs at plan time)")
+    ap.add_argument("--oracle-batch", type=int, default=64,
+                    help="max ids per target_dnn_batch microbatch issued by "
+                         "the oracle broker")
     ap.add_argument("--save-index", default=None,
                     help="path stem to persist the (possibly cracked) index")
     ap.add_argument("--spec", action="append",
@@ -97,6 +113,8 @@ def main(argv=None) -> None:
     ap.add_argument("--specs-file", default=None,
                     help="file holding a JSON list of QuerySpecs")
     args = ap.parse_args(argv)
+    if args.isolated and args.session_budget is not None:
+        ap.error("--session-budget needs session planning; drop --isolated")
 
     specs = _load_specs(args)
     kw = ({"n_frames": args.n_frames} if args.workload != "wikisql"
@@ -120,10 +138,18 @@ def main(argv=None) -> None:
                               triplet=TripletConfig(steps=args.triplet_steps))
         index = build_tasti(wl, cfg, variant=args.variant).index
 
-    engine = QueryEngine(index, wl, crack=args.crack)
+    engine = QueryEngine(index, wl, crack=args.crack,
+                         max_oracle_batch=args.oracle_batch)
+    session_stats = None
     rows = []
-    for spec in specs:
-        rows.append(_result_row(engine.execute(spec)))
+    if args.isolated:
+        for spec in specs:
+            rows.append(_result_row(engine.execute(spec)))
+    else:
+        out = QuerySession(engine, specs,
+                           budget=args.session_budget).execute()
+        rows = [_result_row(r) for r in out.results]
+        session_stats = {**out.stats, "trace": out.plan.trace}
 
     if args.save_index:
         index.save(args.save_index)
@@ -133,7 +159,9 @@ def main(argv=None) -> None:
         "records": index.n_records,
         "reps": index.n_reps,
         "index_version": index.version,
-        "session": engine.stats,
+        "engine": engine.stats,
+        "broker": engine.broker.stats,
+        "session": session_stats,
         "results": rows,
     }, indent=2))
 

@@ -199,7 +199,9 @@ def cache_pspecs(cache_specs: PyTree, cfg: ModelConfig, mesh: Mesh,
                 break
         return P(*axes)
 
-    return jax.tree.map_with_path(one, cache_specs)
+    # jax.tree.map_with_path only exists on newer jax; the tree_util
+    # spelling works everywhere
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
 
 
 def cache_shardings(cache_specs: PyTree, cfg: ModelConfig, mesh: Mesh,

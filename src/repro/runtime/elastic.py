@@ -13,7 +13,11 @@ import math
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every mesh axis is Auto already
+    AxisType = None
 
 
 def largest_pow2_leq(n: int) -> int:
@@ -39,5 +43,7 @@ def make_elastic_mesh(n_devices: Optional[int] = None,
     import numpy as np
     arr = np.array(used).reshape(data, model)
     from jax.sharding import Mesh
+    if AxisType is None:
+        return Mesh(arr, ("data", "model"))
     return Mesh(arr, ("data", "model"),
                 axis_types=(AxisType.Auto, AxisType.Auto))

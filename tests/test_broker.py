@@ -1,0 +1,146 @@
+"""OracleBroker unit tests: microbatching, flush-on-demand, in-flight and
+cache dedup, prefetch credits, and exact per-account fresh/cached accounting."""
+import numpy as np
+import pytest
+
+from repro.core.broker import OracleBroker
+
+pytestmark = pytest.mark.tier1
+
+
+class SpyOracle:
+    """annotate(ids) -> [2*i]; records every batch it was handed."""
+
+    def __init__(self):
+        self.batches = []
+
+    def __call__(self, ids):
+        ids = np.asarray(ids, np.int64)
+        self.batches.append(ids.tolist())
+        return [int(i) * 2 for i in ids]
+
+
+def test_microbatching_and_flush():
+    spy = SpyOracle()
+    broker = OracleBroker(spy, max_batch=10)
+    fut = broker.request(np.arange(25))
+    assert not fut.done() and broker.n_pending == 25
+    assert broker.flush() == 25
+    assert [len(b) for b in spy.batches] == [10, 10, 5]
+    assert broker.stats["fresh"] == 25 and broker.stats["batches"] == 3
+    assert fut.done()
+    assert fut.result() == [2 * i for i in range(25)]
+
+
+def test_flush_on_demand_via_future():
+    spy = SpyOracle()
+    broker = OracleBroker(spy, max_batch=8)
+    fut = broker.request([3, 1, 2])
+    assert fut.result() == [6, 2, 4]  # result() drains the queue
+    assert spy.batches == [[3, 1, 2]]
+
+
+def test_cache_dedup_across_fetches():
+    spy = SpyOracle()
+    broker = OracleBroker(spy, max_batch=64)
+    a = broker.account("a")
+    b = broker.account("b")
+    broker.fetch(np.arange(10), account=a)
+    assert (a.fresh, a.cached) == (10, 0)
+    broker.fetch(np.arange(10), account=b)  # all served from cache
+    assert (b.fresh, b.cached) == (0, 10)
+    assert sum(len(x) for x in spy.batches) == 10
+    assert sorted(a.labeled) == list(range(10)) and b.labeled == []
+
+
+def test_inflight_dedup_charges_first_requester():
+    spy = SpyOracle()
+    broker = OracleBroker(spy, max_batch=64)
+    a = broker.account("a")
+    b = broker.account("b")
+    fa = broker.request([1, 2, 3], account=a)
+    fb = broker.request([2, 3, 4], account=b)  # 2,3 ride a's in-flight ids
+    broker.flush()
+    assert (a.fresh, a.cached) == (3, 0)
+    assert (b.fresh, b.cached) == (1, 2)
+    assert broker.stats["dedup_inflight"] == 2
+    assert sum(len(x) for x in spy.batches) == 4  # 2,3 labeled once
+    assert fa.result() == [2, 4, 6] and fb.result() == [4, 6, 8]
+
+
+def test_duplicates_within_one_request_count_cached():
+    broker = OracleBroker(SpyOracle(), max_batch=64)
+    a = broker.account("a")
+    out = broker.fetch([5, 5, 5], account=a)
+    assert out == [10, 10, 10]
+    assert (a.fresh, a.cached) == (1, 2)
+
+
+def test_reuse_false_bypasses_cache_reads():
+    spy = SpyOracle()
+    broker = OracleBroker(spy, max_batch=4)
+    a = broker.account("a")
+    broker.fetch([1, 2, 3], account=a)
+    b = broker.account("b")
+    broker.fetch([1, 2, 3], account=b, reuse=False)  # re-labels everything
+    assert (b.fresh, b.cached) == (3, 0)
+    assert sum(len(x) for x in spy.batches) == 6
+    # ...but its labels still land in the shared cache for later consumers
+    c = broker.account("c")
+    broker.fetch([1, 2, 3], account=c)
+    assert (c.fresh, c.cached) == (0, 3)
+
+
+def test_reuse_false_microbatches_too():
+    spy = SpyOracle()
+    broker = OracleBroker(spy, max_batch=4)
+    broker.fetch(np.arange(11), reuse=False)
+    assert [len(b) for b in spy.batches] == [4, 4, 3]
+
+
+def test_prefetch_credit_consumed_once():
+    spy = SpyOracle()
+    broker = OracleBroker(spy, max_batch=64)
+    a = broker.account("a")
+    assert broker.prefetch([7, 8, 9], account=a) == 3
+    broker.flush()
+    assert (a.fresh, a.cached) == (3, 0)
+    # the demand read consumes the prefetch credit: no double charge
+    broker.fetch([7, 8, 9], account=a)
+    assert (a.fresh, a.cached) == (3, 0)
+    # later re-reads are ordinary cache hits again
+    broker.fetch([7], account=a)
+    assert (a.fresh, a.cached) == (3, 1)
+
+
+def test_prefetch_skips_cached_and_inflight_ids():
+    broker = OracleBroker(SpyOracle(), max_batch=64)
+    a = broker.account("a")
+    b = broker.account("b")
+    broker.fetch([1], account=a)
+    broker.request([2], account=a)
+    assert broker.prefetch([1, 2, 3], account=b) == 1  # only 3 is new
+    broker.flush()
+    assert (b.fresh, b.cached) == (1, 0)
+
+
+def test_fresh_plus_cached_equals_requests_per_account():
+    rng = np.random.default_rng(0)
+    broker = OracleBroker(SpyOracle(), max_batch=7)
+    total = 0
+    accounts = [broker.account(str(i)) for i in range(3)]
+    for t in range(12):
+        acct = accounts[t % 3]
+        ids = rng.integers(0, 40, size=rng.integers(1, 20))
+        total += len(ids)
+        broker.fetch(ids, account=acct)
+    assert sum(a.fresh + a.cached for a in accounts) == total
+    assert broker.stats["fresh"] + broker.stats["cached"] == total
+    # fresh ids were each labeled exactly once
+    assert broker.stats["fresh"] == len(set().union(
+        *[set(a.labeled) for a in accounts]))
+
+
+def test_invalid_max_batch():
+    with pytest.raises(ValueError, match="max_batch"):
+        OracleBroker(SpyOracle(), max_batch=0)

@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional dependency: skip (don't error collection) where it's absent, so
+# the deterministic parity/property suites still gate tier-1
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.embedder import EmbedderConfig, embed, embed_all, init_embedder

@@ -1,4 +1,6 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp refs."""
+"""Per-kernel parity: Pallas (interpret mode on CPU) vs pure-jnp refs, over
+fixed shape sweeps plus randomized shapes/dtypes.  The distance_topk and
+fpf_update parities are tier-1 gates — the semantic index is built on them."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,6 +14,18 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
+def _random_case(seed):
+    """Randomized (n, c, d, k, dtype) — deliberately off block boundaries."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(33, 700))
+    c = int(rng.integers(5, 400))
+    d = int(rng.integers(8, 160))
+    k = int(rng.integers(1, min(c, 16) + 1))
+    dtype = [np.float32, jnp.bfloat16][int(rng.integers(0, 2))]
+    return n, c, d, k, dtype, rng
+
+
+@pytest.mark.tier1
 @pytest.mark.parametrize("n,c,d,k", [
     (256, 128, 64, 8), (512, 300, 128, 16), (100, 37, 32, 5), (128, 8, 16, 8),
 ])
@@ -35,6 +49,29 @@ def test_distance_topk_sweep(n, c, d, k, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.tier1
+@pytest.mark.parametrize("seed", range(6))
+def test_distance_topk_randomized_parity(seed):
+    n, c, d, k, dtype, rng = _random_case(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)).astype(dtype)
+    r = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32)).astype(dtype)
+    d_ref, _ = distance_topk_ref(x, r, k)
+    d_k, i_k = distance_topk(x, r, k, impl="pallas", interpret=True,
+                             block_n=128, block_c=128)
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref),
+                               rtol=tol, atol=tol)
+    assert np.asarray(i_k).min() >= 0 and np.asarray(i_k).max() < c
+    # returned ids must reproduce the returned distances (ties may reorder)
+    xd = np.asarray(x, np.float32)
+    rd = np.asarray(r, np.float32)
+    d_from_ids = ((xd[:, None, :] - rd[np.asarray(i_k)]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.sort(d_from_ids, 1),
+                               np.sort(np.asarray(d_ref), 1),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.tier1
 @pytest.mark.parametrize("n,d", [(512, 64), (1000, 128), (130, 32)])
 def test_fpf_update_sweep(n, d):
     rng = np.random.default_rng(n)
@@ -49,6 +86,27 @@ def test_fpf_update_sweep(n, d):
     assert float(nm_r[int(i_k)]) == pytest.approx(float(v_r), abs=1e-4)
 
 
+@pytest.mark.tier1
+@pytest.mark.parametrize("seed", range(6))
+def test_fpf_update_randomized_parity(seed):
+    n, _, d, _, dtype, rng = _random_case(seed + 100)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)).astype(dtype)
+    rep = jnp.asarray(rng.normal(size=(d,)).astype(np.float32)).astype(dtype)
+    m0 = jnp.asarray(rng.uniform(0.5, 8, size=(n,)).astype(np.float32))
+    nm_r, i_r, v_r = fpf_update_ref(x, rep, m0)
+    nm_k, i_k, v_k = fpf_update(x, rep, m0, impl="pallas", interpret=True,
+                                block_n=128)
+    tol = 1e-5 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(nm_k), np.asarray(nm_r),
+                               rtol=tol, atol=tol)
+    # the argmax value must match, and the returned index must attain it
+    assert abs(float(v_k) - float(v_r)) < max(tol, 1e-4)
+    assert float(nm_r[int(i_k)]) == pytest.approx(float(v_r), abs=max(tol, 1e-4))
+    # new minima never exceed the old ones
+    assert np.all(np.asarray(nm_k) <= np.asarray(m0) + tol)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("b,s,skv,h,hk,hd,causal,window", [
     (2, 128, 128, 8, 4, 64, True, 0),
     (1, 128, 128, 4, 4, 128, True, 64),

@@ -1,0 +1,142 @@
+"""Property tests for score propagation (paper §4.2), randomized over seeds.
+
+These pin the algebraic contract every query kind leans on:
+
+* numeric propagation is a convex combination — permutation-equivariant,
+  bounded by [min, max] of the rep scores, exact for constant rep scores;
+* top-1 propagation is strictly monotone in the nearest rep's score, with
+  distance only ever breaking ties within one score level;
+* the vectorized categorical vote matches a brute-force per-record count.
+
+Plain numpy randomization (seed-parametrized) rather than hypothesis, so the
+suite runs identically with or without the optional dependency.
+"""
+import numpy as np
+import pytest
+
+from repro.core.propagation import (propagate_categorical, propagate_numeric,
+                                    propagate_top1)
+
+pytestmark = pytest.mark.tier1
+
+SEEDS = range(10)
+
+
+def _random_instance(seed, n_classes=None):
+    rng = np.random.default_rng(seed)
+    c = int(rng.integers(3, 40))
+    n = int(rng.integers(5, 300))
+    k = int(rng.integers(1, min(c, 8) + 1))
+    if n_classes is None:
+        rep_scores = rng.normal(size=c) * rng.uniform(0.1, 10)
+    else:
+        rep_scores = rng.integers(0, n_classes, size=c).astype(np.float64)
+    ids = rng.integers(0, c, size=(n, k))
+    d2 = rng.uniform(0.0, 9.0, size=(n, k))
+    d2.sort(axis=1)  # index layout: ascending like the real cache
+    return rep_scores, ids, d2, rng
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_numeric_permutation_equivariant(seed):
+    """Permuting the records permutes the output the same way (no cross-
+    record coupling), and relabeling the reps consistently changes nothing."""
+    rep_scores, ids, d2, rng = _random_instance(seed)
+    out = propagate_numeric(rep_scores, ids, d2)
+
+    perm = rng.permutation(len(ids))
+    out_perm = propagate_numeric(rep_scores, ids[perm], d2[perm])
+    np.testing.assert_allclose(out_perm, out[perm], rtol=1e-12)
+
+    relabel = rng.permutation(len(rep_scores))  # new id of each old rep
+    rep_scores2 = np.empty_like(rep_scores)
+    rep_scores2[relabel] = rep_scores
+    out_relabel = propagate_numeric(rep_scores2, relabel[ids], d2)
+    np.testing.assert_allclose(out_relabel, out, rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_numeric_bounded_by_rep_scores(seed):
+    rep_scores, ids, d2, _ = _random_instance(seed)
+    out = propagate_numeric(rep_scores, ids, d2)
+    used = rep_scores[ids]
+    # bounded per record by its own k reps, hence globally too
+    assert np.all(out <= used.max(axis=1) + 1e-9)
+    assert np.all(out >= used.min(axis=1) - 1e-9)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_numeric_constant_scores_propagate_exactly(seed):
+    _, ids, d2, rng = _random_instance(seed)
+    const = float(rng.normal() * 5)
+    rep_scores = np.full(ids.max() + 1, const)
+    out = propagate_numeric(rep_scores, ids, d2)
+    np.testing.assert_allclose(out, const, rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_top1_strictly_monotone_distance_breaks_ties(seed):
+    """If record i's nearest rep scores strictly higher than record j's, the
+    propagated order must agree no matter the distances; within one score
+    level the closer record ranks higher."""
+    rep_scores, ids, d2, _ = _random_instance(seed)
+    out = propagate_top1(rep_scores, ids, d2)
+    base = rep_scores[ids[:, 0]]
+    d = np.sqrt(d2[:, 0])
+    order = np.argsort(base, kind="stable")
+    for a, b in zip(order[:-1], order[1:]):
+        # the tie-break nudge is < 1e-6, so monotonicity is guaranteed for
+        # any score gap the scorers actually produce (integers / {0,1})
+        if base[b] > base[a] + 1e-5:
+            assert out[b] > out[a], (base[a], base[b])
+    # ties: smaller distance wins (strictly, unless distances tie too)
+    levels, inverse = np.unique(base, return_inverse=True)
+    for lvl in range(len(levels)):
+        members = np.where(inverse == lvl)[0]
+        if len(members) < 2:
+            continue
+        md, mo = d[members], out[members]
+        closer = np.argsort(md, kind="stable")
+        assert np.all(np.diff(mo[closer]) <= 1e-15)
+
+
+def test_top1_tie_break_never_crosses_score_levels():
+    """The distance nudge must stay smaller than any score gap: a far record
+    whose rep scores 1.0 still beats a near record whose rep scores
+    1.0 - the smallest gap the scorer can produce at float32 scale."""
+    rep_scores = np.array([1.0, 1.0 - 1e-4])
+    ids = np.array([[0], [1]])
+    d2 = np.array([[1e6], [0.0]])  # record 0 is *very* far from its rep
+    out = propagate_top1(rep_scores, ids, d2)
+    assert out[0] > out[1]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_categorical_matches_brute_force(seed):
+    n_classes = int(np.random.default_rng(seed + 1000).integers(2, 9))
+    rep_scores, ids, d2, _ = _random_instance(seed, n_classes=n_classes)
+    out = propagate_categorical(rep_scores, ids, d2, n_classes=n_classes)
+
+    # brute force: per record, per class, sum the weights of voting reps
+    eps = 1e-6
+    w = 1.0 / (np.sqrt(np.maximum(d2, 0.0)) + eps)
+    cls = rep_scores[ids].astype(np.int64)
+    expect = np.empty(len(ids), np.int64)
+    for i in range(len(ids)):
+        votes = np.zeros(n_classes)
+        for j in range(ids.shape[1]):
+            votes[cls[i, j]] += w[i, j]
+        expect[i] = int(np.argmax(votes))
+    np.testing.assert_array_equal(out, expect)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_categorical_unanimous_vote_is_exact(seed):
+    rng = np.random.default_rng(seed)
+    n_classes = 5
+    label = int(rng.integers(0, n_classes))
+    rep_scores = np.full(7, float(label))
+    ids = rng.integers(0, 7, size=(50, 3))
+    d2 = rng.uniform(0, 4, size=(50, 3))
+    out = propagate_categorical(rep_scores, ids, d2, n_classes=n_classes)
+    np.testing.assert_array_equal(out, label)

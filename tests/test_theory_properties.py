@@ -10,6 +10,10 @@ invariants of the propagation operator.
 """
 import numpy as np
 import pytest
+
+# optional dependency: skip (don't error collection) where it's absent —
+# tests/test_propagation_properties.py carries the seeded equivalents
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.propagation import propagate_numeric
