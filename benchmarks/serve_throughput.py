@@ -1,0 +1,116 @@
+"""Serving throughput: queries/sec and fresh-labels-per-query over HTTP,
+concurrent vs serial clients, cold vs warm label store.
+
+Four phases against a real :class:`~repro.serve.server.QueryServer` (stdlib
+HTTP, admission window, worker pool), one shared TASTI index:
+
+* **cold/serial** — empty store, clients one at a time;
+* **cold/concurrent** — empty store, all clients posting at once (the
+  admission window coalesces them into shared sessions, so fresh labels per
+  query drop);
+* **warm/serial + warm/concurrent** — a *restarted* server (new engine, new
+  broker) over the store the cold phases persisted, answering the same spec
+  lists.  The paper's cost metric for a repeat query must be **zero** fresh
+  target-DNN invocations — asserted, not just reported.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from typing import List
+
+from benchmarks import common
+from repro.core.engine import QueryEngine
+from repro.core.index import TastiIndex
+from repro.serve import LabelStore, QueryClient, QueryServer
+
+
+def _spec_lists(quick: bool) -> List[List[dict]]:
+    lists = []
+    for seed in range(4 if quick else 8):
+        lists.append([
+            {"kind": "aggregation", "score": "score_count",
+             "err": 0.15, "seed": seed},
+            {"kind": "selection", "score": "score_has_object",
+             "budget": 100 + 20 * seed, "seed": seed},
+            {"kind": "limit", "score": "score_has_object",
+             "k_results": 3 + seed % 3},
+        ])
+    return lists
+
+
+def _start_server(index, wl, stem: str) -> QueryServer:
+    engine = QueryEngine(index, wl)
+    store = LabelStore.for_index(stem, index)
+    store.attach(engine.broker, engine)
+    return QueryServer(engine, port=0, admission_window=0.05,
+                       max_workers=4, store=store).start()
+
+
+def _drive(url: str, spec_lists: List[List[dict]], concurrent: bool):
+    """Post every spec list; returns (queries/sec, total fresh labels)."""
+    client = QueryClient(url)
+    client.wait_ready(30)
+    fresh = [0] * len(spec_lists)
+    errors: List[BaseException] = []
+    t0 = time.perf_counter()
+    if concurrent:
+        def post(i):
+            try:
+                fresh[i] = client.query(spec_lists[i])["request"]["fresh"]
+            except BaseException as e:  # noqa: BLE001 - re-raised below
+                errors.append(e)
+        threads = [threading.Thread(target=post, args=(i,))
+                   for i in range(len(spec_lists))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            # a swallowed failure would leave fresh[i]=0 and falsely pass
+            # the warm-restart zero-fresh assertion
+            raise errors[0]
+    else:
+        for i, specs in enumerate(spec_lists):
+            fresh[i] = client.query(specs)["request"]["fresh"]
+    elapsed = time.perf_counter() - t0
+    n_queries = sum(len(s) for s in spec_lists)
+    return n_queries / max(elapsed, 1e-9), sum(fresh)
+
+
+def run(quick: bool = False):
+    wl = common.get_workload("night-street", quick)
+    index = TastiIndex.build(wl.features, 150 if quick else 300,
+                             wl.target_dnn_batch, k=4, random_fraction=0.0,
+                             seed=0)
+    spec_lists = _spec_lists(quick)
+    n_queries = sum(len(s) for s in spec_lists)
+    rows = []
+
+    with tempfile.TemporaryDirectory() as tmp:
+        for mode in ("serial", "concurrent"):
+            stem = f"{tmp}/{mode}"
+            # cold: empty store, every label paid for at the target DNN
+            server = _start_server(index, wl, stem)
+            qps, fresh = _drive(server.url, spec_lists, mode == "concurrent")
+            server.shutdown()
+            rows.append((f"serve/cold_{mode}", "queries_per_s", round(qps, 2)))
+            rows.append((f"serve/cold_{mode}", "fresh_per_query",
+                         round(fresh / n_queries, 2)))
+
+            # warm restart: NEW engine + broker, labels only from the store
+            server = _start_server(index, wl, stem)
+            seeded = len(server.store)
+            qps, fresh = _drive(server.url, spec_lists, mode == "concurrent")
+            server.shutdown()
+            rows.append((f"serve/warm_{mode}", "queries_per_s", round(qps, 2)))
+            rows.append((f"serve/warm_{mode}", "fresh_per_query",
+                         round(fresh / n_queries, 2)))
+            rows.append((f"serve/warm_{mode}", "store_labels", seeded))
+            if fresh != 0:
+                raise AssertionError(
+                    f"warm {mode} restart issued {fresh} fresh target-DNN "
+                    "invocations on a repeated spec list; the persistent "
+                    "label store must answer repeats for free")
+    return rows

@@ -9,7 +9,7 @@ import sys
 
 def main() -> None:
     for arch in ("qwen3-1.7b", "xlstm-350m"):
-        cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+        cmd = [sys.executable, "-m", "repro.launch.serve_lm", "--arch", arch,
                "--preset", "ci", "--batch", "4", "--prompt-len", "24",
                "--decode-steps", "12"]
         print("+", " ".join(cmd))

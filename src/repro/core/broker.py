@@ -18,10 +18,19 @@ well-shaped microbatches.  :class:`OracleBroker` owns exactly that seam:
 * **per-consumer accounting** — each :class:`OracleAccount` (one per query
   spec) tracks exactly the fresh labels it caused and the cache hits it was
   served, so per-spec invocation counts stay honest under cross-spec dedup:
-  a record labeled for spec A is *fresh* for A and *cached* for B.
+  a record labeled for spec A is *fresh* for A and *cached* for B;
+* **thread safety** — one reentrant lock protects the pending queue, cache,
+  stats, and account registry, so concurrent :class:`~repro.core.session.
+  QuerySession` s (the serving layer's worker pool) share one broker.  The
+  lock is held *across* ``target_dnn_batch`` calls: the target DNN is the
+  single expensive resource, so labeling is serialized anyway, and holding
+  the lock makes in-flight dedup exact — a thread demanding an id another
+  thread is mid-flushing simply blocks until the label is cached.
 """
 from __future__ import annotations
 
+import threading
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
@@ -59,12 +68,14 @@ class LabelFuture:
         self._ids = [int(i) for i in ids]
 
     def done(self) -> bool:
-        return all(i in self._broker.cache for i in self._ids)
+        with self._broker._lock:
+            return all(i in self._broker.cache for i in self._ids)
 
     def result(self) -> List[Any]:
-        if not self.done():
-            self._broker.flush()
-        return [self._broker.cache[i] for i in self._ids]
+        with self._broker._lock:
+            if not self.done():
+                self._broker.flush()
+            return [self._broker.cache[i] for i in self._ids]
 
 
 class OracleBroker:
@@ -84,6 +95,12 @@ class OracleBroker:
         self.max_batch = int(max_batch)
         self.cache: Dict[int, Any] = {} if cache is None else cache
         self._pending: Dict[int, Optional[OracleAccount]] = {}  # id -> owner
+        self._lock = threading.RLock()
+        # bounded: a long-lived server issues one account per served spec,
+        # so retaining them all would grow without bound; global totals live
+        # in self.stats, this ring only feeds the /stats "recent" view
+        self._accounts: "deque[OracleAccount]" = deque(maxlen=256)
+        self._on_fresh: List[Callable[[Dict[int, Any]], None]] = []
         self.stats: Dict[str, int] = {
             "requests": 0,        # ids seen by request()/fetch()
             "fresh": 0,           # records actually labeled
@@ -96,7 +113,50 @@ class OracleBroker:
         }
 
     def account(self, name: str = "") -> OracleAccount:
-        return OracleAccount(name=name)
+        acct = OracleAccount(name=name)
+        with self._lock:
+            self._accounts.append(acct)
+        return acct
+
+    def account_stats(self) -> List[Dict[str, Any]]:
+        """Per-account fresh/cached counters for the most recently issued
+        accounts (bounded ring; the serving layer's ``/stats`` payload —
+        all-time totals are ``stats["fresh"]``/``stats["cached"]``)."""
+        with self._lock:
+            return [{"name": a.name, "fresh": a.fresh, "cached": a.cached}
+                    for a in self._accounts]
+
+    def snapshot(self) -> Dict[str, int]:
+        """A consistent copy of ``stats`` (plus cache/pending sizes)."""
+        with self._lock:
+            return {**self.stats, "cache_size": len(self.cache),
+                    "n_pending": len(self._pending)}
+
+    # -- persistence hooks ---------------------------------------------------
+    def seed(self, labels: Dict[int, Any]) -> int:
+        """Preload the cache (e.g. from a persistent
+        :class:`~repro.serve.store.LabelStore`).  Already-cached ids keep
+        their current label.  Returns the number of labels added."""
+        added = 0
+        with self._lock:
+            for i, a in labels.items():
+                i = int(i)
+                if i not in self.cache:
+                    self.cache[i] = a
+                    added += 1
+        return added
+
+    def on_fresh(self, callback: Callable[[Dict[int, Any]], None]) -> None:
+        """Register a write-through listener: called with ``{id: annotation}``
+        after every batch of fresh labels (flush or cache-bypassing fetch),
+        while the broker lock is held — keep callbacks quick."""
+        with self._lock:
+            self._on_fresh.append(callback)
+
+    def _notify_fresh(self, labeled: Dict[int, Any]) -> None:
+        if labeled:
+            for cb in self._on_fresh:
+                cb(labeled)
 
     # -- enqueue -------------------------------------------------------------
     def request(self, ids, account: Optional[OracleAccount] = None
@@ -106,30 +166,31 @@ class OracleBroker:
         already paid for; fresh charges land at flush time on the consumer
         that caused the labeling."""
         ids = np.asarray(ids, np.int64).ravel()
-        self.stats["requests"] += len(ids)
-        for raw in ids:
-            i = int(raw)
-            if i in self.cache:
-                if account is not None and i in account._credit:
-                    account._credit.discard(i)  # pre-paid by prefetch
+        with self._lock:
+            self.stats["requests"] += len(ids)
+            for raw in ids:
+                i = int(raw)
+                if i in self.cache:
+                    if account is not None and i in account._credit:
+                        account._credit.discard(i)  # pre-paid by prefetch
+                    else:
+                        self.stats["cached"] += 1
+                        if account is not None:
+                            account.cached += 1
+                elif i in self._pending:
+                    if account is not None and i in account._credit:
+                        # own unflushed prefetch: this demand-read consumes
+                        # the credit; the fresh charge lands at flush
+                        account._credit.discard(i)
+                    else:
+                        self.stats["cached"] += 1
+                        self.stats["dedup_inflight"] += 1
+                        if account is not None:
+                            account.cached += 1
                 else:
-                    self.stats["cached"] += 1
-                    if account is not None:
-                        account.cached += 1
-            elif i in self._pending:
-                if account is not None and i in account._credit:
-                    # own unflushed prefetch: this demand-read consumes the
-                    # credit; the fresh charge lands at flush
-                    account._credit.discard(i)
-                else:
-                    self.stats["cached"] += 1
-                    self.stats["dedup_inflight"] += 1
-                    if account is not None:
-                        account.cached += 1
-            else:
-                self._pending[i] = account
-        self.stats["max_pending"] = max(self.stats["max_pending"],
-                                        len(self._pending))
+                    self._pending[i] = account
+            self.stats["max_pending"] = max(self.stats["max_pending"],
+                                            len(self._pending))
         return LabelFuture(self, ids)
 
     def prefetch(self, ids, account: Optional[OracleAccount] = None) -> int:
@@ -139,17 +200,18 @@ class OracleBroker:
         the number of ids actually enqueued."""
         ids = np.asarray(ids, np.int64).ravel()
         enqueued = 0
-        for raw in ids:
-            i = int(raw)
-            if i in self.cache or i in self._pending:
-                continue
-            self._pending[i] = account
-            if account is not None:
-                account._credit.add(i)
-            enqueued += 1
-        self.stats["prefetched"] += enqueued
-        self.stats["max_pending"] = max(self.stats["max_pending"],
-                                        len(self._pending))
+        with self._lock:
+            for raw in ids:
+                i = int(raw)
+                if i in self.cache or i in self._pending:
+                    continue
+                self._pending[i] = account
+                if account is not None:
+                    account._credit.add(i)
+                enqueued += 1
+            self.stats["prefetched"] += enqueued
+            self.stats["max_pending"] = max(self.stats["max_pending"],
+                                            len(self._pending))
         return enqueued
 
     # -- consume -------------------------------------------------------------
@@ -165,59 +227,68 @@ class OracleBroker:
         ids = np.asarray(ids, np.int64).ravel()
         if reuse:
             return self.request(ids, account=account).result()
-        self.stats["requests"] += len(ids)
-        for start in range(0, len(ids), self.max_batch):
-            chunk = ids[start:start + self.max_batch]
-            anns = self.annotate(chunk)
-            self.stats["batches"] += 1
-            for i, a in zip(chunk, anns):
-                self.cache[int(i)] = a
-        self.stats["fresh"] += len(ids)
-        if account is not None:
-            account.fresh += len(ids)
-            account.labeled.extend(int(i) for i in ids)
-        if len(ids):
-            self.stats["flushes"] += 1
-        return [self.cache[int(i)] for i in ids]
+        with self._lock:
+            self.stats["requests"] += len(ids)
+            labeled: Dict[int, Any] = {}
+            for start in range(0, len(ids), self.max_batch):
+                chunk = ids[start:start + self.max_batch]
+                anns = self.annotate(chunk)
+                self.stats["batches"] += 1
+                for i, a in zip(chunk, anns):
+                    self.cache[int(i)] = a
+                    labeled[int(i)] = a
+            self.stats["fresh"] += len(ids)
+            if account is not None:
+                account.fresh += len(ids)
+                account.labeled.extend(int(i) for i in ids)
+            if len(ids):
+                self.stats["flushes"] += 1
+            self._notify_fresh(labeled)
+            return [self.cache[int(i)] for i in ids]
 
     # -- drain ---------------------------------------------------------------
     @property
     def n_pending(self) -> int:
-        return len(self._pending)
+        with self._lock:
+            return len(self._pending)
 
     def flush(self) -> int:
         """Label everything pending, in microbatches of ``max_batch``.
         Fresh charges land on the account that enqueued each id.  Returns
         the number of records labeled."""
-        if not self._pending:
-            return 0
-        queued = list(self._pending.items())  # insertion order
-        self._pending.clear()
-        pending = []
-        for i, owner in queued:
-            # a forced fetch() may have labeled a pending id in the meantime:
-            # the enqueuer is served from cache, not charged fresh
-            if i in self.cache:
-                if owner is not None and i in owner._credit:
-                    owner._credit.discard(i)  # demand read will charge cached
+        with self._lock:
+            if not self._pending:
+                return 0
+            queued = list(self._pending.items())  # insertion order
+            self._pending.clear()
+            pending = []
+            for i, owner in queued:
+                # a forced fetch() may have labeled a pending id meanwhile:
+                # the enqueuer is served from cache, not charged fresh
+                if i in self.cache:
+                    if owner is not None and i in owner._credit:
+                        owner._credit.discard(i)  # demand read charges cached
+                    else:
+                        self.stats["cached"] += 1
+                        if owner is not None:
+                            owner.cached += 1
                 else:
-                    self.stats["cached"] += 1
+                    pending.append((i, owner))
+            if not pending:
+                return 0
+            labeled: Dict[int, Any] = {}
+            for start in range(0, len(pending), self.max_batch):
+                chunk = pending[start:start + self.max_batch]
+                chunk_ids = np.asarray([i for i, _ in chunk], np.int64)
+                anns = self.annotate(chunk_ids)
+                self.stats["batches"] += 1
+                for (i, owner), a in zip(chunk, anns):
+                    self.cache[i] = a
+                    labeled[i] = a
+                    self.stats["fresh"] += 1
                     if owner is not None:
-                        owner.cached += 1
-            else:
-                pending.append((i, owner))
-        if not pending:
-            return 0
-        for start in range(0, len(pending), self.max_batch):
-            chunk = pending[start:start + self.max_batch]
-            chunk_ids = np.asarray([i for i, _ in chunk], np.int64)
-            anns = self.annotate(chunk_ids)
-            self.stats["batches"] += 1
-            for (i, owner), a in zip(chunk, anns):
-                self.cache[i] = a
-                self.stats["fresh"] += 1
-                if owner is not None:
-                    owner.fresh += 1
-                    owner.labeled.append(i)
-        self.stats["flushes"] += 1
-        return len(pending)
+                        owner.fresh += 1
+                        owner.labeled.append(i)
+            self.stats["flushes"] += 1
+            self._notify_fresh(labeled)
+            return len(pending)

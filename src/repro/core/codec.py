@@ -1,0 +1,35 @@
+"""JSON wire form of a :class:`~repro.core.engine.QueryResult`.
+
+One codec serves every presentation layer: the ``repro.launch.query`` CLI
+prints these rows and the serving layer (``repro.serve.server``) returns
+them to HTTP clients.  It lives in core so presentation layers depend on
+core, never on each other.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+
+def result_row(res) -> Dict[str, Any]:
+    """Flatten a ``QueryResult`` into JSON-safe primitives."""
+    row = {
+        "kind": res.kind,
+        "n_invocations": res.n_invocations,
+        "n_oracle_fresh": res.n_oracle_fresh,
+        "n_oracle_cached": res.n_oracle_cached,
+        "n_cracked": res.n_cracked,
+        "query_cost_s": round(sum(res.cost.values()), 3),
+        "plan": res.plan.trace,
+    }
+    if res.estimate is not None:
+        row["estimate"] = round(res.estimate, 6)
+    if res.ci_half_width is not None:
+        row["ci_half_width"] = round(res.ci_half_width, 6)
+    if res.threshold is not None:
+        row["threshold"] = round(res.threshold, 6)
+    if res.selected is not None:
+        row["n_selected"] = int(len(res.selected))
+        row["selected_head"] = [int(i) for i in res.selected[:10]]
+    if res.session is not None:
+        row["session"] = res.session
+    return row

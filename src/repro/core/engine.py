@@ -29,6 +29,7 @@ directly (legacy shims).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Union
 
@@ -165,6 +166,11 @@ class QueryEngine:
         self._proxy_cache: Dict[Any, np.ndarray] = {}
         self._proxy_cache_version = index.version
         self._broker = broker
+        # guards the proxy cache, stats counters, and index mutation
+        # (crack_with) so concurrent sessions can share one engine; always
+        # acquired before the broker's lock, never after
+        self._lock = threading.RLock()
+        self._on_crack: List[Callable[[int], None]] = []
         self.stats: Dict[str, int] = {
             "propagation_computes": 0,
             "proxy_cache_hits": 0,
@@ -184,10 +190,24 @@ class QueryEngine:
     def broker(self) -> OracleBroker:
         """The batched, deduplicating seam to ``workload.target_dnn_batch``;
         its cache is the engine's shared oracle-label cache."""
-        if self._broker is None:
-            self._broker = OracleBroker(self._annotate,
-                                        max_batch=self.max_oracle_batch)
-        return self._broker
+        with self._lock:
+            if self._broker is None:
+                self._broker = OracleBroker(self._annotate,
+                                            max_batch=self.max_oracle_batch)
+            return self._broker
+
+    def add_stats(self, **deltas: int) -> None:
+        """Atomically bump engine counters (dict ``+=`` is not)."""
+        with self._lock:
+            for k, v in deltas.items():
+                self.stats[k] += v
+
+    def on_crack(self, callback: Callable[[int], None]) -> None:
+        """Register a listener called with the number of new representatives
+        after every index-mutating crack (a persistent label store re-stamps
+        the index version it is cached against)."""
+        with self._lock:
+            self._on_crack.append(callback)
 
     @property
     def _label_cache(self) -> Dict[int, Any]:
@@ -225,30 +245,32 @@ class QueryEngine:
         if mode not in PROPAGATION_MODES:
             raise ValueError(f"unknown propagation mode {mode!r}; "
                              f"expected one of {PROPAGATION_MODES}")
-        if self._proxy_cache_version != self.index.version:
-            self._proxy_cache.clear()
-            self._proxy_cache_version = self.index.version
-        key = (self._cache_key(score, score_key), mode, n_classes)
-        if key in self._proxy_cache:
-            self.stats["proxy_cache_hits"] += 1
-            return self._proxy_cache[key]
-        fn = self._score_fn(score)
-        rep_scores = self.index.rep_scores(fn)
-        if mode == "numeric":
-            out = propagation.propagate_numeric(
-                rep_scores, self.index.topk_ids, self.index.topk_d2)
-        elif mode == "top1":
-            out = propagation.propagate_top1(
-                rep_scores, self.index.topk_ids, self.index.topk_d2)
-        else:  # categorical
-            if n_classes is None:
-                raise ValueError("categorical propagation requires n_classes")
-            out = propagation.propagate_categorical(
-                rep_scores, self.index.topk_ids, self.index.topk_d2,
-                n_classes=n_classes).astype(np.float64)
-        self.stats["propagation_computes"] += 1
-        self._proxy_cache[key] = out
-        return out
+        with self._lock:
+            if self._proxy_cache_version != self.index.version:
+                self._proxy_cache.clear()
+                self._proxy_cache_version = self.index.version
+            key = (self._cache_key(score, score_key), mode, n_classes)
+            if key in self._proxy_cache:
+                self.stats["proxy_cache_hits"] += 1
+                return self._proxy_cache[key]
+            fn = self._score_fn(score)
+            rep_scores = self.index.rep_scores(fn)
+            if mode == "numeric":
+                out = propagation.propagate_numeric(
+                    rep_scores, self.index.topk_ids, self.index.topk_d2)
+            elif mode == "top1":
+                out = propagation.propagate_top1(
+                    rep_scores, self.index.topk_ids, self.index.topk_d2)
+            else:  # categorical
+                if n_classes is None:
+                    raise ValueError(
+                        "categorical propagation requires n_classes")
+                out = propagation.propagate_categorical(
+                    rep_scores, self.index.topk_ids, self.index.topk_d2,
+                    n_classes=n_classes).astype(np.float64)
+            self.stats["propagation_computes"] += 1
+            self._proxy_cache[key] = out
+            return out
 
     # -- oracle with the shared label cache ----------------------------------
     def _make_oracle(self, score_fn: Callable, reuse: bool,
@@ -349,8 +371,8 @@ class QueryEngine:
 
         # session-prefetched labels were already folded into engine.stats by
         # the session; only the execution delta lands here
-        self.stats["label_fresh"] += acct.fresh - fresh0
-        self.stats["label_cache_hits"] += acct.cached - cached0
+        self.add_stats(label_fresh=acct.fresh - fresh0,
+                       label_cache_hits=acct.cached - cached0)
         cost = {
             "target_dnn_s": acct.fresh * schema_lib.TARGET_DNN_COST_S,
             "crack_distance_s": (n_cracked * self.index.n_records
@@ -380,15 +402,24 @@ class QueryEngine:
         ids = np.unique(np.asarray(list(ids), np.int64))
         if len(ids) == 0:
             return 0
-        missing = np.asarray([i for i in ids if int(i) not in self._label_cache],
-                             np.int64)
-        if len(missing):
-            # through the broker: microbatched and counted like every other
-            # oracle call
-            self.broker.fetch(missing)
-            self.stats["label_fresh"] += len(missing)
-        before = self.index.n_reps
-        self.index.crack(ids, [self._label_cache[int(i)] for i in ids])
-        added = self.index.n_reps - before
-        self.stats["cracked_records"] += added
+        # one crack at a time: index mutation and the proxy-cache version
+        # check must not interleave with a concurrent session's propagation
+        with self._lock:
+            missing = np.asarray(
+                [i for i in ids if int(i) not in self._label_cache], np.int64)
+            if len(missing):
+                # through the broker: microbatched and counted like every
+                # other oracle call
+                self.broker.fetch(missing)
+                self.stats["label_fresh"] += len(missing)
+            before = self.index.n_reps
+            self.index.crack(ids, [self._label_cache[int(i)] for i in ids])
+            added = self.index.n_reps - before
+            self.stats["cracked_records"] += added
+            callbacks = list(self._on_crack) if added else []
+        # listeners run OUTSIDE the engine lock: a label store's re-stamp
+        # compacts its whole snapshot, which must not stall every concurrent
+        # session on self._lock (they only contend on the store's own lock)
+        for cb in callbacks:
+            cb(added)
         return added

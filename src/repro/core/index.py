@@ -127,27 +127,33 @@ class TastiIndex:
 
     # ------------------------------------------------------------------
     # Persistence: arrays in ``<path>.npz``, everything else in a versioned
-    # ``<path>.meta.json`` — portable and safe to load (no pickle).  The old
-    # ``<path>.ann.pkl`` format is still *read* for one release.
+    # ``<path>.meta.json`` — portable and safe to load (no pickle).  Both
+    # files are written atomically (temp file + rename), so a crash mid-save
+    # cannot leave a torn pair on disk.
     FORMAT_VERSION = 1
 
     def save(self, path: str) -> None:
         import json
+        from repro.core.persist import atomic_write
         p = pathlib.Path(path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        np.savez(p.with_suffix(".npz"), embeddings=self.embeddings,
-                 rep_ids=self.rep_ids, topk_d2=self.topk_d2,
-                 topk_ids=self.topk_ids, k=np.int64(self.k))
+        # serialize the meta FIRST: an unencodable annotation must fail
+        # before any file is touched, not orphan a fresh .npz
         meta = {"format_version": self.FORMAT_VERSION,
                 "k": self.k,
                 "index_version": self.version,
+                "n_reps": int(self.n_reps),
                 "cost": dataclasses.asdict(self.cost),
                 "annotations": [_encode_annotation(a)
                                 for a in self.annotations]}
-        with open(p.with_suffix(".meta.json"), "w") as f:
-            json.dump(meta, f)
-        # re-saving a legacy index migrates it: drop the stale pickle so the
-        # saved artifact is pickle-free
+        meta_body = json.dumps(meta)
+        with atomic_write(p.with_suffix(".npz"), "wb") as f:
+            np.savez(f, embeddings=self.embeddings,
+                     rep_ids=self.rep_ids, topk_d2=self.topk_d2,
+                     topk_ids=self.topk_ids, k=np.int64(self.k))
+        with atomic_write(p.with_suffix(".meta.json"), "w") as f:
+            f.write(meta_body)
+        # re-saving over a legacy index drops its stale (now unreadable)
+        # pickle so the saved artifact is unambiguous
         p.with_suffix(".ann.pkl").unlink(missing_ok=True)
 
     @staticmethod
@@ -156,32 +162,33 @@ class TastiIndex:
         p = pathlib.Path(path)
         z = np.load(p.with_suffix(".npz"))
         meta_json = p.with_suffix(".meta.json")
-        if meta_json.exists():
-            with open(meta_json) as f:
-                meta = json.load(f)
-            fv = int(meta.get("format_version", -1))
-            if fv > TastiIndex.FORMAT_VERSION:
-                raise ValueError(
-                    f"{meta_json} has format_version {fv}; this build reads "
-                    f"<= {TastiIndex.FORMAT_VERSION}")
-            annotations = [_decode_annotation(a) for a in meta["annotations"]]
-            index_version = int(meta.get("index_version", 0))
-        else:
-            # one-release fallback for pre-versioned pickle indexes
+        if not meta_json.exists():
             pkl = p.with_suffix(".ann.pkl")
-            if not pkl.exists():
-                raise FileNotFoundError(
-                    f"no {meta_json.name} or legacy {pkl.name} next to {p}")
-            import pickle
-            import warnings
-            warnings.warn(
-                f"loading legacy pickle index {pkl}; re-save to migrate to "
-                "the versioned JSON format (pickle support will be removed)",
-                DeprecationWarning, stacklevel=2)
-            with open(pkl, "rb") as f:
-                meta = pickle.load(f)
-            annotations = meta["annotations"]
-            index_version = 0
+            if pkl.exists():
+                raise ValueError(
+                    f"{pkl} is a legacy pickle-format index; pickle support "
+                    "has been removed — load and re-save it with a release "
+                    "that still reads .ann.pkl to migrate to the versioned "
+                    "JSON+npz format")
+            raise FileNotFoundError(f"no {meta_json.name} next to {p}")
+        with open(meta_json) as f:
+            meta = json.load(f)
+        fv = int(meta.get("format_version", -1))
+        if fv > TastiIndex.FORMAT_VERSION:
+            raise ValueError(
+                f"{meta_json} has format_version {fv}; this build reads "
+                f"<= {TastiIndex.FORMAT_VERSION}")
+        annotations = [_decode_annotation(a) for a in meta["annotations"]]
+        index_version = int(meta.get("index_version", 0))
+        # each file is written atomically but the pair is not one
+        # transaction: a crash between the two renames can mix an old meta
+        # with a new npz (or vice versa) — detect, don't mis-serve
+        if len(annotations) != len(z["rep_ids"]):
+            raise ValueError(
+                f"{p} is torn: {meta_json.name} lists {len(annotations)} "
+                f"annotations but the npz holds {len(z['rep_ids'])} "
+                "representatives (crash between the two file writes?); "
+                "re-save the index")
         return TastiIndex(embeddings=z["embeddings"], rep_ids=z["rep_ids"],
                           annotations=annotations,
                           topk_d2=z["topk_d2"], topk_ids=z["topk_ids"],

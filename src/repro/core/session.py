@@ -218,7 +218,15 @@ class QuerySession:
     # -- execution -----------------------------------------------------------
     def execute(self) -> SessionResult:
         """Prefetch every spec's certain first requests, flush once, then
-        execute the specs in order against the shared engine."""
+        execute the specs in order against the shared engine.
+
+        Thread-safe over a shared engine: many sessions may execute
+        concurrently from a worker pool (the serving layer does) — per-spec
+        accounts keep fresh/cached exact under cross-session dedup, and
+        answers match isolated runs because labels and propagation are
+        deterministic per record.  Only ``stats["oracle_batches"]`` is a
+        broker-level delta and may include a concurrent session's batches.
+        """
         sp = self.plan()
         engine = self.engine
         broker = engine.broker
@@ -243,12 +251,14 @@ class QuerySession:
                     sp.trace.append(
                         f"spec {i} cracks: later specs fetch on demand")
                     break
-            fresh0 = broker.stats["fresh"]
+            # account-based delta, not a broker.stats delta: a concurrent
+            # session's flush in this window must not inflate our count
+            fresh0 = sum(a.fresh for a in accounts)
             broker.flush()
-            prefetch_fresh = broker.stats["fresh"] - fresh0
+            prefetch_fresh = sum(a.fresh for a in accounts) - fresh0
             # execute() only folds post-entry deltas into engine.stats, so
             # the prefetch phase records its labels here
-            engine.stats["label_fresh"] += prefetch_fresh
+            engine.add_stats(label_fresh=prefetch_fresh)
             sp.trace.append(
                 f"prefetched {enqueued} ids -> {prefetch_fresh} fresh labels "
                 f"in {broker.stats['batches'] - batches0} microbatch(es)")

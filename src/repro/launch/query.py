@@ -34,6 +34,7 @@ from repro.core.queries.registry import registered_kinds
 from repro.core.schema import make_workload
 from repro.core.session import QuerySession
 from repro.core.triplet import TripletConfig
+from repro.core.codec import result_row as _result_row
 
 
 def _load_specs(args) -> list:
@@ -52,30 +53,6 @@ def _load_specs(args) -> list:
                          "--specs-file; known kinds: "
                          f"{registered_kinds()}")
     return [QuerySpec.from_dict(d) for d in raw]
-
-
-def _result_row(res) -> dict:
-    row = {
-        "kind": res.kind,
-        "n_invocations": res.n_invocations,
-        "n_oracle_fresh": res.n_oracle_fresh,
-        "n_oracle_cached": res.n_oracle_cached,
-        "n_cracked": res.n_cracked,
-        "query_cost_s": round(sum(res.cost.values()), 3),
-        "plan": res.plan.trace,
-    }
-    if res.estimate is not None:
-        row["estimate"] = round(res.estimate, 6)
-    if res.ci_half_width is not None:
-        row["ci_half_width"] = round(res.ci_half_width, 6)
-    if res.threshold is not None:
-        row["threshold"] = round(res.threshold, 6)
-    if res.selected is not None:
-        row["n_selected"] = int(len(res.selected))
-        row["selected_head"] = [int(i) for i in res.selected[:10]]
-    if res.session is not None:
-        row["session"] = res.session
-    return row
 
 
 def main(argv=None) -> None:

@@ -1,7 +1,10 @@
-"""Batched serving driver: prefill + decode with the sequence-sharded cache.
+"""Batched LM decode demo: prefill + decode with the sequence-sharded cache.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --preset ci \
-        --batch 4 --prompt-len 32 --decode-steps 16
+(Renamed from ``repro.launch.serve`` — the bare ``serve`` name now means the
+query server, ``repro.launch.serve_queries``.)
+
+    PYTHONPATH=src python -m repro.launch.serve_lm --arch qwen3-1.7b \
+        --preset ci --batch 4 --prompt-len 32 --decode-steps 16
 """
 from __future__ import annotations
 

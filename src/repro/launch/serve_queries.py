@@ -1,0 +1,118 @@
+"""Query server CLI: serve declarative ``QuerySpec`` s over HTTP.
+
+Builds (or loads) a TASTI index, opens the persistent
+:class:`~repro.serve.store.LabelStore` next to it, and starts a
+:class:`~repro.serve.server.QueryServer`:
+
+    PYTHONPATH=src python -m repro.launch.serve_queries \\
+        --workload night-street --n-frames 3000 --quick \\
+        --port 8123 --admission-window 0.05 --store /tmp/tasti/ns
+
+    PYTHONPATH=src python -m repro.serve.client --url http://127.0.0.1:8123 \\
+        --spec '{"kind": "aggregation", "score": "score_count", "err": 0.1}'
+
+With ``--store`` (defaulting to ``--index`` when one is given), every oracle
+flush writes labels through to ``<stem>.labels.json``/``.labels.npz`` — a
+restarted server answers repeat queries with zero fresh target-DNN
+invocations.  The process prints one ``{"serving": ...}`` JSON line when the
+port is bound, then blocks until SIGINT or a client POSTs ``/shutdown``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+
+from repro.core.engine import QueryEngine
+from repro.core.index import TastiIndex
+from repro.core.pipeline import TastiConfig, build_tasti
+from repro.core.schema import make_workload
+from repro.core.triplet import TripletConfig
+from repro.serve.server import QueryServer
+from repro.serve.store import LabelStore
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="serve declarative QuerySpecs over HTTP")
+    ap.add_argument("--workload", default="night-street",
+                    choices=["night-street", "taipei", "amsterdam", "wikisql"])
+    ap.add_argument("--n-frames", type=int, default=8000)
+    ap.add_argument("--index", default=None,
+                    help="path stem of a saved index to load; omit to build")
+    ap.add_argument("--variant", default="T", choices=["T", "PT"])
+    ap.add_argument("--n-train", type=int, default=400)
+    ap.add_argument("--n-reps", type=int, default=800)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--triplet-steps", type=int, default=400)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny build budgets (smoke tests / CI)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8123,
+                    help="0 picks an ephemeral port (printed at startup)")
+    ap.add_argument("--admission-window", type=float, default=0.05,
+                    help="seconds the first request of a batch waits for "
+                         "co-travelers to coalesce into one session")
+    ap.add_argument("--max-workers", type=int, default=4,
+                    help="concurrently executing sessions")
+    ap.add_argument("--oracle-batch", type=int, default=64)
+    ap.add_argument("--crack", action="store_true",
+                    help="engine-level default for the cracking feedback loop")
+    ap.add_argument("--store", default=None,
+                    help="path stem for the persistent label store "
+                         "(default: the --index stem; omit both to serve "
+                         "without persistence)")
+    args = ap.parse_args(argv)
+
+    kw = ({"n_frames": args.n_frames} if args.workload != "wikisql"
+          else {"n_records": args.n_frames})
+    wl = make_workload(args.workload, **kw)
+
+    if args.index:
+        index = TastiIndex.load(args.index)
+        if index.n_records != len(wl.features):
+            raise SystemExit(
+                f"index covers {index.n_records} records but workload "
+                f"{wl.name} has {len(wl.features)}; pass matching --n-frames")
+    else:
+        if args.quick:
+            cfg = TastiConfig(n_train=100, n_reps=200, k=4,
+                              triplet=TripletConfig(steps=60, batch=128),
+                              pretrain_steps=40)
+        else:
+            cfg = TastiConfig(n_train=args.n_train, n_reps=args.n_reps,
+                              k=args.k,
+                              triplet=TripletConfig(steps=args.triplet_steps))
+        index = build_tasti(wl, cfg, variant=args.variant).index
+
+    engine = QueryEngine(index, wl, crack=args.crack,
+                         max_oracle_batch=args.oracle_batch)
+    store = None
+    store_stem = args.store or args.index
+    if store_stem:
+        store = LabelStore.for_index(store_stem, index)
+        seeded = store.attach(engine.broker, engine)
+        print(f"[serve] label store {store.json_path}: "
+              f"{len(store)} labels, {seeded} seeded into the broker",
+              file=sys.stderr)
+
+    server = QueryServer(engine, host=args.host, port=args.port,
+                         admission_window=args.admission_window,
+                         max_workers=args.max_workers, store=store).start()
+    print(json.dumps({"serving": server.url, "workload": wl.name,
+                      "records": index.n_records, "reps": index.n_reps,
+                      "index_version": index.version,
+                      "store_labels": None if store is None else len(store)}),
+          flush=True)
+    # park until a client POSTs /shutdown (or SIGINT); wait() only returns
+    # after shutdown fully finished, including the final store save
+    try:
+        server.wait()
+    except KeyboardInterrupt:
+        print("[serve] shutting down", file=sys.stderr)
+        server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Query-serving subsystem: a long-lived HTTP endpoint over the query engine.
+
+* :mod:`repro.serve.store` — :class:`LabelStore`, the persistent oracle-label
+  cache that lives next to a saved :class:`~repro.core.index.TastiIndex` and
+  survives process restarts;
+* :mod:`repro.serve.server` — :class:`QueryServer`, a stdlib
+  ``ThreadingHTTPServer`` whose admission window coalesces concurrent
+  requests into shared :class:`~repro.core.session.QuerySession` s;
+* :mod:`repro.serve.client` — :class:`QueryClient` plus a small CLI.
+
+(The JSON wire form of a ``QueryResult`` is :mod:`repro.core.codec` — shared
+with the ``repro.launch.query`` CLI.)
+"""
+__all__ = ["LabelStore", "QueryClient", "QueryServer"]
+
+_HOMES = {"LabelStore": "repro.serve.store",
+          "QueryClient": "repro.serve.client",
+          "QueryServer": "repro.serve.server"}
+
+
+def __getattr__(name):
+    # lazy (PEP 562) so `python -m repro.serve.client` does not import the
+    # client module twice (once via the package, once as __main__)
+    if name in _HOMES:
+        import importlib
+        return getattr(importlib.import_module(_HOMES[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,138 @@
+"""HTTP client for :class:`~repro.serve.server.QueryServer` (stdlib only).
+
+Library use:
+
+    from repro.serve import QueryClient
+    c = QueryClient("http://127.0.0.1:8123")
+    out = c.query([{"kind": "aggregation", "score": "score_count"}])
+    out["results"][0]["estimate"], out["request"]["fresh"]
+
+CLI (mirrors ``repro.launch.query``'s spec flags; exits non-zero if
+``--expect-fresh`` is violated, which the CI smoke uses to assert that a
+warm-store repeat request costs zero target-DNN invocations):
+
+    PYTHONPATH=src python -m repro.serve.client --url http://127.0.0.1:8123 \\
+        --wait-ready 60 \\
+        --spec '{"kind": "aggregation", "score": "score_count", "err": 0.1}' \\
+        --expect-fresh 0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import urllib.error
+import urllib.request
+from typing import Any, Dict, List, Optional
+
+
+class ServerError(RuntimeError):
+    """Non-2xx response from the query server (message = server's error)."""
+
+
+class QueryClient:
+    def __init__(self, url: str, timeout: float = 600.0):
+        self.url = url.rstrip("/")
+        self.timeout = float(timeout)
+
+    def _call(self, path: str, payload: Optional[Any] = None,
+              method: Optional[str] = None) -> Dict[str, Any]:
+        data = None if payload is None else json.dumps(payload).encode()
+        req = urllib.request.Request(
+            self.url + path, data=data,
+            headers={"Content-Type": "application/json"},
+            method=method or ("POST" if data is not None else "GET"))
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                return json.loads(resp.read().decode())
+        except urllib.error.HTTPError as e:
+            try:
+                detail = json.loads(e.read().decode()).get("error", str(e))
+            except Exception:  # noqa: BLE001 - best-effort error detail
+                detail = str(e)
+            raise ServerError(f"{path}: {detail}") from None
+
+    # -- api -----------------------------------------------------------------
+    def query(self, specs: List[Any],
+              budget: Optional[int] = None) -> Dict[str, Any]:
+        """POST specs (dicts or ``QuerySpec`` s); returns the response JSON:
+        ``results`` (per-spec rows), ``session``, and ``request`` totals."""
+        raw = [s if isinstance(s, dict) else s.to_dict() for s in specs]
+        body: Any = raw if budget is None else {"specs": raw, "budget": budget}
+        return self._call("/query", payload=body)
+
+    def stats(self) -> Dict[str, Any]:
+        return self._call("/stats")
+
+    def healthy(self) -> bool:
+        try:
+            return bool(self._call("/healthz").get("ok"))
+        except (ServerError, OSError):
+            return False
+
+    def wait_ready(self, timeout: float = 30.0, poll: float = 0.2) -> None:
+        """Block until ``/healthz`` answers (server start + index build can
+        take a while); raises ``TimeoutError`` otherwise."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.healthy():
+                return
+            time.sleep(poll)
+        raise TimeoutError(f"{self.url} not ready after {timeout}s")
+
+    def shutdown(self) -> None:
+        self._call("/shutdown", payload={}, method="POST")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="post QuerySpecs to a running repro.serve QueryServer")
+    ap.add_argument("--url", required=True, help="server base url")
+    ap.add_argument("--spec", action="append",
+                    help="QuerySpec as JSON (repeatable)")
+    ap.add_argument("--specs-file", default=None,
+                    help="file holding a JSON list of QuerySpecs")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="session budget for this request (never coalesced)")
+    ap.add_argument("--wait-ready", type=float, default=0.0,
+                    help="poll /healthz for up to this many seconds first")
+    ap.add_argument("--stats", action="store_true", help="print /stats")
+    ap.add_argument("--shutdown", action="store_true",
+                    help="stop the server (after any query)")
+    ap.add_argument("--expect-fresh", type=int, default=None,
+                    help="exit non-zero unless the request's fresh-label "
+                         "total equals this (CI assertion)")
+    args = ap.parse_args(argv)
+
+    client = QueryClient(args.url)
+    if args.wait_ready > 0:
+        client.wait_ready(timeout=args.wait_ready)
+
+    specs: List[dict] = []
+    if args.specs_file:
+        with open(args.specs_file) as f:
+            specs.extend(json.load(f))
+    for s in args.spec or []:
+        specs.append(json.loads(s))
+
+    if specs:
+        out = client.query(specs, budget=args.budget)
+        print(json.dumps(out, indent=2))
+        if args.expect_fresh is not None:
+            got = out["request"]["fresh"]
+            if got != args.expect_fresh:
+                print(f"expected {args.expect_fresh} fresh labels, got {got}",
+                      file=sys.stderr)
+                sys.exit(1)
+    elif args.expect_fresh is not None:
+        ap.error("--expect-fresh needs --spec/--specs-file")
+
+    if args.stats:
+        print(json.dumps(client.stats(), indent=2))
+    if args.shutdown:
+        client.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""``QueryServer``: concurrent query sessions over one engine, via HTTP.
+
+The system's first long-lived, multi-client layer.  Clients POST JSON
+``QuerySpec`` lists (the same schema as ``repro.launch.query``); the server
+
+* **coalesces** — requests arriving within one *admission window* are merged
+  into a single shared :class:`~repro.core.session.QuerySession`, so strangers'
+  queries share joint planning, the stratified sample, and one combined
+  oracle flush (the whole point of sessions, paper §4/§5);
+* **runs sessions concurrently** — batches execute on a worker pool over one
+  :class:`~repro.core.engine.QueryEngine` /
+  :class:`~repro.core.broker.OracleBroker`, whose locks make concurrent
+  sessions produce results identical to isolated runs;
+* **persists** — with a :class:`~repro.serve.store.LabelStore` attached to
+  the broker, every flush is written through to disk, so a restarted server
+  answers repeat queries with zero fresh target-DNN invocations.
+
+Endpoints (all JSON):
+
+* ``POST /query`` — body is either a list of spec dicts or
+  ``{"specs": [...], "budget": int}``; responds with per-spec result rows
+  plus session- and request-level label accounting;
+* ``GET /stats`` — server counters, engine/broker stats, per-account
+  fresh/cached counters, store and index info;
+* ``GET /healthz`` — readiness probe;
+* ``POST /shutdown`` — clean stop (also available as ``server.shutdown()``).
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, List, Optional
+
+from repro.core.codec import result_row
+from repro.core.engine import QueryEngine, QuerySpec
+from repro.core.session import QuerySession
+
+_STOP = object()  # admission-queue sentinel
+
+
+@dataclass
+class _Submission:
+    """One client request, from admission to response."""
+    specs: List[QuerySpec]
+    budget: Optional[int]
+    done: threading.Event = field(default_factory=threading.Event)
+    rows: Optional[List[dict]] = None
+    session: Optional[Dict[str, Any]] = None
+    error: Optional[str] = None
+    status: int = 200
+
+
+class QueryServer:
+    """Serves ``QuerySpec`` lists over HTTP against one shared engine.
+
+        server = QueryServer(engine, store=store, admission_window=0.05)
+        server.start()           # returns once the port is bound
+        print(server.url)        # http://127.0.0.1:<port>
+        ...
+        server.shutdown()
+
+    ``admission_window`` (seconds) is how long the first arrival of a batch
+    waits for co-travelers; ``max_workers`` caps concurrently executing
+    sessions.  Submissions carrying their own ``budget`` are never coalesced
+    (a combined budget across strangers has no owner to answer to).
+    """
+
+    def __init__(self, engine: QueryEngine, host: str = "127.0.0.1",
+                 port: int = 0, admission_window: float = 0.05,
+                 max_workers: int = 4, store=None,
+                 request_timeout: float = 600.0, session_kw: Optional[dict] = None):
+        self.engine = engine
+        self.host = host
+        self.port = int(port)          # 0 = ephemeral; real port set by start()
+        self.admission_window = float(admission_window)
+        self.max_workers = int(max_workers)
+        self.store = store
+        self.request_timeout = float(request_timeout)
+        self.session_kw = dict(session_kw or {})
+        self.stats: Dict[str, int] = {
+            "requests": 0,     # POST /query submissions admitted
+            "specs": 0,        # specs across all submissions
+            "sessions": 0,     # QuerySessions executed
+            "coalesced": 0,    # submissions that shared another's session
+            "errors": 0,       # sessions that raised
+        }
+        self._stats_lock = threading.Lock()
+        self._queue: "queue.Queue" = queue.Queue()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._http: Optional[ThreadingHTTPServer] = None
+        self._threads: List[threading.Thread] = []
+        self._started = False
+        self._done = threading.Event()
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "QueryServer":
+        if self._started:
+            raise RuntimeError("server already started")
+        self._started = True
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.max_workers,
+            thread_name_prefix="query-session")
+        server = self
+
+        class Handler(_Handler):
+            owner = server
+
+        self._http = ThreadingHTTPServer((self.host, self.port), Handler)
+        self._http.daemon_threads = True
+        self.port = self._http.server_address[1]
+        self._admit_thread = threading.Thread(
+            target=self._admission_loop, name="query-admit", daemon=True)
+        self._http_thread = threading.Thread(
+            target=self._http.serve_forever, name="query-http", daemon=True)
+        self._threads = [self._admit_thread, self._http_thread]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def shutdown(self) -> None:
+        """Stop accepting, drain in-flight sessions, persist the store."""
+        with self._stats_lock:
+            if not self._started:
+                return
+            self._started = False
+        self._queue.put(_STOP)
+        if self._http is not None:
+            self._http.shutdown()
+            self._http.server_close()
+        # the admission loop must be DONE handing batches to the pool before
+        # the pool stops accepting, or an admitted batch dies on submit()
+        # with its clients left waiting
+        for t in self._threads:
+            t.join(timeout=30.0)
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+        if self.store is not None:
+            self.store.save()
+        self._done.set()
+
+    def wait(self) -> None:
+        """Block (interruptibly) until :meth:`shutdown` has fully finished —
+        including the final store save.  The serving CLI parks on this."""
+        while not self._done.wait(timeout=0.5):
+            pass
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, specs: List[QuerySpec],
+               budget: Optional[int] = None) -> _Submission:
+        """Enqueue one submission for the admission loop (HTTP-free entry
+        point; the handler and in-process tests both use it).  Raises
+        ``RuntimeError`` once shutdown has begun — callers must not be left
+        waiting on a submission no loop will ever pick up."""
+        sub = _Submission(specs=specs, budget=budget)
+        with self._stats_lock:
+            if not self._started:
+                raise RuntimeError("server is shutting down")
+            self.stats["requests"] += 1
+            self.stats["specs"] += len(specs)
+            # under the same lock shutdown() flips _started: either this
+            # submission is enqueued before _STOP, or submit() raises
+            self._queue.put(sub)
+        return sub
+
+    def _admission_loop(self) -> None:
+        while True:
+            sub = self._queue.get()
+            if sub is _STOP:
+                self._drain_on_stop()
+                return
+            batch = [sub]
+            if sub.budget is None and self.admission_window > 0:
+                deadline = time.monotonic() + self.admission_window
+                while True:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    try:
+                        nxt = self._queue.get(timeout=remaining)
+                    except queue.Empty:
+                        break
+                    if nxt is _STOP:
+                        self._queue.put(_STOP)  # handled next iteration
+                        break
+                    if nxt.budget is not None:
+                        # budgeted submissions run alone (their cap is theirs)
+                        self._dispatch([nxt])
+                    else:
+                        batch.append(nxt)
+            self._dispatch(batch)
+
+    def _dispatch(self, batch: List[_Submission]) -> None:
+        try:
+            self._pool.submit(self._run_batch, batch)
+        except RuntimeError:  # pool already shut down: fail, don't strand
+            for sub in batch:
+                sub.error = "server is shutting down"
+                sub.status = 503
+                sub.done.set()
+
+    def _drain_on_stop(self) -> None:
+        """Fail any submission that raced in behind the _STOP sentinel
+        instead of leaving its client blocked until request_timeout."""
+        while True:
+            try:
+                sub = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if sub is _STOP:
+                continue
+            sub.error = "server is shutting down"
+            sub.status = 503
+            sub.done.set()
+
+    # -- execution -----------------------------------------------------------
+    def _fail_batch(self, batch: List[_Submission], e: Exception,
+                    status: int) -> None:
+        with self._stats_lock:
+            self.stats["errors"] += 1
+        for sub in batch:
+            sub.error = f"{type(e).__name__}: {e}"
+            sub.status = status
+            sub.done.set()
+
+    def _run_batch(self, batch: List[_Submission]) -> None:
+        specs = [s for sub in batch for s in sub.specs]
+        budget = batch[0].budget if len(batch) == 1 else None
+        session = QuerySession(self.engine, specs, budget=budget,
+                               **self.session_kw)
+        try:
+            # plan separately first: it spends no oracle budget, and its
+            # failures (malformed knobs, bad score names, impossible
+            # budgets) are the CLIENT's — 400
+            session.plan()
+        except Exception as e:  # noqa: BLE001 - fault barrier per batch
+            self._fail_batch(batch, e, 400)
+            return
+        try:
+            out = session.execute()
+        except Exception as e:  # noqa: BLE001 - execution faults are OURS
+            self._fail_batch(batch, e, 500)
+            return
+        rows = [result_row(r) for r in out.results]
+        session = {**out.stats,
+                   "coalesced_requests": len(batch),
+                   "coalesced_specs": len(specs)}
+        pos = 0
+        for sub in batch:
+            sub.rows = rows[pos:pos + len(sub.specs)]
+            pos += len(sub.specs)
+            sub.session = session
+            sub.done.set()
+        with self._stats_lock:
+            self.stats["sessions"] += 1
+            self.stats["coalesced"] += len(batch) - 1
+
+    # -- introspection -------------------------------------------------------
+    def stats_payload(self) -> Dict[str, Any]:
+        engine, broker = self.engine, self.engine.broker
+        snapshot = broker.snapshot()
+        with self._stats_lock:
+            server_stats = dict(self.stats)
+        payload: Dict[str, Any] = {
+            "server": {**server_stats,
+                       "admission_window_s": self.admission_window,
+                       "max_workers": self.max_workers},
+            "engine": dict(engine.stats),
+            "broker": snapshot,
+            "accounts": {
+                # all-time totals come from the broker (the per-account ring
+                # is bounded); "recent" is the last few specs' accounts
+                "fresh_total": snapshot["fresh"],
+                "cached_total": snapshot["cached"],
+                "recent": broker.account_stats()[-32:],
+            },
+            "index": {"records": engine.index.n_records,
+                      "reps": engine.index.n_reps,
+                      "version": engine.index.version},
+        }
+        if self.store is not None:
+            payload["store"] = {"path": str(self.store.path),
+                                "n_labels": len(self.store),
+                                "index_version": self.store.index_version}
+        return payload
+
+
+class _Handler(BaseHTTPRequestHandler):
+    owner: QueryServer = None  # bound per-server by QueryServer.start()
+
+    def log_message(self, *args) -> None:  # quiet: stats are at /stats
+        pass
+
+    def _reply(self, status: int, payload: Dict[str, Any]) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self) -> None:
+        if self.path == "/healthz":
+            self._reply(200, {"ok": True})
+        elif self.path == "/stats":
+            self._reply(200, self.owner.stats_payload())
+        else:
+            self._reply(404, {"error": f"unknown path {self.path}"})
+
+    def do_POST(self) -> None:
+        if self.path == "/shutdown":
+            self._reply(200, {"ok": True, "shutting_down": True})
+            # a fresh NON-daemon thread: shutdown() joins the serving threads
+            # and must survive the main thread exiting (its final store.save
+            # must not be killed mid-write)
+            threading.Thread(target=self.owner.shutdown).start()
+            return
+        if self.path != "/query":
+            self._reply(404, {"error": f"unknown path {self.path}"})
+            return
+        try:
+            length = int(self.headers.get("Content-Length", 0))
+            body = json.loads(self.rfile.read(length) or b"null")
+            if isinstance(body, list):
+                raw_specs, budget = body, None
+            elif isinstance(body, dict):
+                raw_specs = body.get("specs")
+                budget = body.get("budget")
+            else:
+                raise ValueError("body must be a JSON list of specs or "
+                                 "{'specs': [...], 'budget': int}")
+            if not raw_specs:
+                raise ValueError("no specs in request")
+            specs = [QuerySpec.from_dict(d) for d in raw_specs]
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            self._reply(400, {"error": f"{type(e).__name__}: {e}"})
+            return
+        try:
+            sub = self.owner.submit(specs, budget=budget)
+        except RuntimeError as e:
+            self._reply(503, {"error": str(e)})
+            return
+        if not sub.done.wait(timeout=self.owner.request_timeout):
+            self._reply(504, {"error": "query timed out in the session pool"})
+            return
+        if sub.error is not None:
+            self._reply(sub.status, {"error": sub.error})
+            return
+        self._reply(200, {
+            "results": sub.rows,
+            "session": sub.session,
+            "request": {
+                "n_specs": len(sub.rows),
+                "fresh": sum(r["n_oracle_fresh"] for r in sub.rows),
+                "cached": sum(r["n_oracle_cached"] for r in sub.rows),
+            },
+        })

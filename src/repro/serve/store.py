@@ -1,0 +1,247 @@
+"""Persistent oracle-label store: the label cache that outlives the process.
+
+TASTI's economics price everything in target-DNN invocations, and one index
+is meant to amortize labels across *many* queries (paper §5-6) — so letting
+the broker's label cache die with the process throws the amortization away.
+A :class:`LabelStore` persists ``{record id: target-DNN annotation}`` next to
+the saved index, with the same format discipline as
+:meth:`~repro.core.index.TastiIndex.save`:
+
+* a compacted **snapshot** — ids in ``<stem>.labels.npz``, annotations in a
+  versioned ``<stem>.labels.json`` (the index's JSON annotation codec, no
+  pickle), both written atomically via the shared
+  :func:`~repro.core.persist.atomic_write` helper;
+* an append-only **journal** (``<stem>.labels.jsonl``) — every broker flush
+  appends one line of just-labeled records, O(batch) not O(store), so
+  write-through stays cheap under the broker lock and even a SIGKILLed
+  server keeps every label it paid for; :meth:`save` folds the journal into
+  the snapshot and truncates it;
+* a **lineage check** — the store records both the ``TastiIndex.version``
+  (crack counter) and a content :func:`index_fingerprint` of the embeddings
+  it was cached against; :meth:`open` discards a store whose lineage no
+  longer matches (labels are re-derivable, a wrong-dataset cache served at
+  zero fresh cost is silently-wrong answers);
+* :meth:`attach` seeds an :class:`~repro.core.broker.OracleBroker` cache and
+  registers the write-through, so a restarted server answers repeat queries
+  with **zero** fresh labels.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.index import _decode_annotation, _encode_annotation
+from repro.core.persist import atomic_write
+
+
+def index_fingerprint(index) -> str:
+    """A cheap content identity for the dataset behind ``index``: sha256
+    over the embedding array's shape/dtype and a strided byte sample.
+    Stable across cracking (cracks add representatives, never touch
+    embeddings), different across datasets — the check that stops a reused
+    ``--store`` path from serving another workload's labels."""
+    emb = np.ascontiguousarray(index.embeddings)
+    h = hashlib.sha256()
+    h.update(repr((emb.shape, str(emb.dtype))).encode())
+    flat = emb.view(np.uint8).ravel()
+    h.update(flat[::max(1, len(flat) // 65536)].tobytes())
+    return h.hexdigest()[:32]
+
+
+class LabelStore:
+    """A dict of oracle labels with a JSON+npz+journal on-disk form.
+
+        store = LabelStore.for_index("/tmp/tasti/ns", index)
+        store.attach(engine.broker, engine)   # seed + write-through
+        ... queries run; every broker flush lands in the journal ...
+        store.save()                          # compact (shutdown does this)
+    """
+
+    FORMAT_VERSION = 1
+
+    def __init__(self, path: str, index_version: int = 0,
+                 fingerprint: Optional[str] = None,
+                 labels: Optional[Dict[int, Any]] = None):
+        self.path = pathlib.Path(path)
+        self.index_version = int(index_version)
+        self.fingerprint = fingerprint
+        self.labels: Dict[int, Any] = dict(labels or {})
+        self._lock = threading.RLock()
+        # does the on-disk snapshot carry THIS store's lineage?  attach()
+        # compacts first when it does not (fresh stem, or a stale store
+        # from another index generation that must not be appended to)
+        self._snapshot_valid = False
+
+    # suffixes are appended (not substituted) so dotted stems survive
+    def _sib(self, suffix: str) -> pathlib.Path:
+        return self.path.parent / (self.path.name + suffix)
+
+    @property
+    def json_path(self) -> pathlib.Path:
+        return self._sib(".labels.json")
+
+    @property
+    def npz_path(self) -> pathlib.Path:
+        return self._sib(".labels.npz")
+
+    @property
+    def journal_path(self) -> pathlib.Path:
+        return self._sib(".labels.jsonl")
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+    def _lineage(self) -> Dict[str, Any]:
+        return {"format_version": self.FORMAT_VERSION,
+                "index_version": self.index_version,
+                "fingerprint": self.fingerprint}
+
+    def _lineage_matches(self, meta: Dict[str, Any]) -> bool:
+        if int(meta.get("index_version", -1)) != self.index_version:
+            return False
+        stored = meta.get("fingerprint")
+        if self.fingerprint is not None and stored != self.fingerprint:
+            return False
+        return True
+
+    # -- disk ----------------------------------------------------------------
+    @classmethod
+    def for_index(cls, path: str, index) -> "LabelStore":
+        """The store next to ``path``, validated against ``index``'s full
+        lineage (crack version + embedding fingerprint)."""
+        return cls.open(path, index.version,
+                        fingerprint=index_fingerprint(index))
+
+    @classmethod
+    def open(cls, path: str, index_version: int,
+             fingerprint: Optional[str] = None) -> "LabelStore":
+        """The store at ``path`` if present *and* cached against the given
+        index lineage; otherwise a fresh empty store.
+
+        A lineage mismatch (the index was cracked and re-saved after the
+        store was written, rolled back, or the stem was reused for another
+        dataset) invalidates the store: it comes back empty and the stale
+        files are overwritten on the next save.  The snapshot is loaded
+        first, then the journal of post-snapshot flushes is replayed (a
+        torn final line — crash mid-append — stops the replay there).
+        """
+        store = cls(path, index_version=index_version, fingerprint=fingerprint)
+        if store.json_path.exists() and store.npz_path.exists():
+            with open(store.json_path) as f:
+                meta = json.load(f)
+            fv = int(meta.get("format_version", -1))
+            if fv > cls.FORMAT_VERSION:
+                raise ValueError(
+                    f"{store.json_path} has format_version {fv}; this build "
+                    f"reads <= {cls.FORMAT_VERSION}")
+            if store._lineage_matches(meta):
+                ids = np.load(store.npz_path)["ids"]
+                anns = [_decode_annotation(a) for a in meta["annotations"]]
+                if len(ids) != len(anns):
+                    raise ValueError(
+                        f"label store {store.path} is torn: {len(ids)} ids "
+                        f"vs {len(anns)} annotations")
+                store.labels = {int(i): a for i, a in zip(ids, anns)}
+                store._snapshot_valid = True
+        store._replay_journal()
+        return store
+
+    def _replay_journal(self) -> int:
+        """Fold journal lines (post-snapshot flushes) into ``labels``.
+        The header line must match this store's lineage, else the whole
+        journal is ignored (it belongs to another index generation)."""
+        if not self.journal_path.exists():
+            return 0
+        replayed = 0
+        with open(self.journal_path) as f:
+            for n, line in enumerate(f):
+                try:
+                    entry = json.loads(line)
+                except json.JSONDecodeError:
+                    break  # torn tail from a crash mid-append: keep the rest
+                if n == 0:
+                    if not self._lineage_matches(entry):
+                        return 0
+                    continue
+                for i, a in zip(entry["ids"], entry["annotations"]):
+                    self.labels[int(i)] = _decode_annotation(a)
+                    replayed += 1
+        return replayed
+
+    def _append_journal(self, labeled: Dict[int, Any]) -> None:
+        """O(batch) durable append; creates the journal (with a lineage
+        header) on first use after a compaction."""
+        ids = [int(i) for i in labeled]
+        entry = {"ids": ids,
+                 "annotations": [_encode_annotation(labeled[i]) for i in ids]}
+        new = not self.journal_path.exists()
+        self.journal_path.parent.mkdir(parents=True, exist_ok=True)
+        with open(self.journal_path, "a") as f:
+            if new:
+                f.write(json.dumps(self._lineage()) + "\n")
+            f.write(json.dumps(entry) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def save(self) -> None:
+        """Compact: atomically persist the full snapshot (both files
+        temp-file+renamed), then truncate the journal it subsumes."""
+        with self._lock:
+            ids = np.asarray(sorted(self.labels), np.int64)
+            meta = {**self._lineage(),
+                    "annotations": [_encode_annotation(self.labels[int(i)])
+                                    for i in ids]}
+            meta_body = json.dumps(meta)  # encode before touching any file
+            with atomic_write(self.npz_path, "wb") as f:
+                np.savez(f, ids=ids)
+            with atomic_write(self.json_path, "w") as f:
+                f.write(meta_body)
+            self.journal_path.unlink(missing_ok=True)
+            self._snapshot_valid = True
+
+    # -- broker integration --------------------------------------------------
+    def update(self, labeled: Dict[int, Any]) -> int:
+        """Merge freshly labeled records (memory only; returns how many were
+        new).  Persistence happens via the attached write-through journal
+        or an explicit :meth:`save`."""
+        with self._lock:
+            new = 0
+            for i, a in labeled.items():
+                i = int(i)
+                if i not in self.labels:
+                    new += 1
+                self.labels[i] = a
+            return new
+
+    def attach(self, broker, engine=None) -> int:
+        """Seed ``broker.cache`` from this store and journal every flush.
+        With ``engine`` given, a mid-serving crack re-stamps the lineage the
+        store is cached against (and compacts), so its labels stay loadable
+        against the re-saved index.  Returns the labels seeded."""
+        seeded = broker.seed(self.labels)
+        if not self._snapshot_valid:
+            # fresh stem, or stale files from another index generation:
+            # compact now so the on-disk lineage (snapshot + any journal
+            # header written later) is unambiguously this store's
+            self.save()
+
+        def _write_through(labeled: Dict[int, Any]) -> None:
+            with self._lock:
+                self.update(labeled)
+                self._append_journal(labeled)
+
+        broker.on_fresh(_write_through)
+        if engine is not None:
+            def _restamp(_added: int) -> None:
+                with self._lock:
+                    self.index_version = engine.index.version
+                    self.save()
+
+            engine.on_crack(_restamp)
+        return seeded

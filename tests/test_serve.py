@@ -1,0 +1,363 @@
+"""Query-serving subsystem tests: persistent LabelStore (round-trip,
+invalidation, write-through), concurrent-session parity over one thread-safe
+broker, and the HTTP QueryServer end to end (admission-window coalescing,
+/stats accounting, warm repeat requests costing zero fresh labels)."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.engine import QueryEngine, QuerySpec
+from repro.core.index import TastiIndex
+from repro.core.schema import make_workload
+from repro.core.session import QuerySession
+from repro.serve import LabelStore, QueryClient, QueryServer
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return make_workload("night-street", n_frames=1200)
+
+
+@pytest.fixture(scope="module")
+def index(wl):
+    return TastiIndex.build(wl.features, 120, wl.target_dnn_batch, k=4,
+                            random_fraction=0.0, seed=0)
+
+
+SPECS = [QuerySpec(kind="aggregation", score="score_count", err=0.2, seed=0),
+         QuerySpec(kind="selection", score="score_has_object", budget=80,
+                   seed=0),
+         QuerySpec(kind="limit", score="score_has_object", k_results=3)]
+
+
+# -- LabelStore ------------------------------------------------------------
+def test_label_store_roundtrip_zero_fresh_after_restart(wl, index, tmp_path):
+    """save -> reload -> broker serves every repeat query from the cache."""
+    stem = str(tmp_path / "idx")
+    store = LabelStore.for_index(stem, index)
+    assert len(store) == 0
+    eng = QueryEngine(index, wl)
+    store.attach(eng.broker, eng)
+    out1 = QuerySession(eng, SPECS).execute()
+    fresh1 = out1.stats["fresh_total"]
+    assert fresh1 > 0
+    # write-through already persisted every flush: files exist and agree
+    assert store.json_path.exists() and store.npz_path.exists()
+
+    # "restart": brand-new engine + broker, labels only from disk
+    store2 = LabelStore.for_index(stem, index)
+    assert len(store2) == len(store) > 0
+    eng2 = QueryEngine(index, wl)
+    seeded = store2.attach(eng2.broker, eng2)
+    assert seeded == len(store2)
+    out2 = QuerySession(eng2, SPECS).execute()
+    assert out2.stats["fresh_total"] == 0
+    # answers are identical to the first run, just free
+    for a, b in zip(out1.results, out2.results):
+        assert a.estimate == b.estimate
+        assert a.n_invocations == b.n_invocations
+        if a.selected is not None:
+            np.testing.assert_array_equal(a.selected, b.selected)
+
+
+def test_label_store_invalidated_by_index_version_change(wl, tmp_path):
+    """A store cached against one index lineage does not load against
+    another: cracking bumps ``TastiIndex.version`` and opens come back
+    empty."""
+    index = TastiIndex.build(wl.features, 60, wl.target_dnn_batch, k=4,
+                             random_fraction=0.0, seed=1)
+    stem = str(tmp_path / "idx")
+    store = LabelStore.open(stem, index.version)
+    store.update({0: wl.target_dnn(0), 5: wl.target_dnn(5)})
+    store.save()
+    assert len(LabelStore.open(stem, index.version)) == 2
+
+    pool = np.setdiff1d(np.arange(index.n_records), index.rep_ids)
+    index.crack(pool[:3], wl.target_dnn_batch(pool[:3]))
+    assert len(LabelStore.open(stem, index.version)) == 0  # invalidated
+
+
+def test_write_through_restamps_version_after_midserving_crack(wl, tmp_path):
+    """A crack=True query bumps the index version mid-serving; the attached
+    store re-stamps itself on the next write-through so its labels stay
+    loadable against the cracked index."""
+    index = TastiIndex.build(wl.features, 60, wl.target_dnn_batch, k=4,
+                             random_fraction=0.0, seed=2)
+    stem = str(tmp_path / "idx")
+    store = LabelStore.open(stem, index.version)
+    eng = QueryEngine(index, wl)
+    store.attach(eng.broker, eng)
+    res = eng.execute(QuerySpec(kind="selection", score="score_has_object",
+                                budget=40, seed=0, crack=True))
+    assert res.n_cracked > 0 and index.version > 0
+    assert store.index_version == index.version
+    reloaded = LabelStore.open(stem, index.version)
+    assert len(reloaded) == len(store) > 0
+
+
+def test_store_save_is_atomic(tmp_path):
+    """A failing save (unencodable annotation) leaves no torn/partial files."""
+    store = LabelStore(str(tmp_path / "s"), index_version=0)
+    store.update({1: 1.0})
+    store.save()
+    store.update({2: object()})  # not JSON-encodable
+    with pytest.raises(TypeError):
+        store.save()
+    assert not list(tmp_path.glob("*.tmp"))
+    assert len(LabelStore.open(str(tmp_path / "s"), 0)) == 1  # old state intact
+
+
+def test_store_fingerprint_invalidates_reused_stem(wl, index, tmp_path):
+    """A --store stem reused for a DIFFERENT dataset must not serve the old
+    labels: same index_version (0 for every fresh build), different
+    embedding fingerprint -> the store comes back empty."""
+    stem = str(tmp_path / "s")
+    store = LabelStore.for_index(stem, index)
+    store.update({0: wl.target_dnn(0)})
+    store.save()
+    assert len(LabelStore.for_index(stem, index)) == 1
+
+    other = make_workload("taipei", n_frames=300)
+    other_index = TastiIndex.build(other.features, 30,
+                                   other.target_dnn_batch, k=2,
+                                   random_fraction=0.0, seed=0)
+    assert other_index.version == index.version == 0
+    assert len(LabelStore.for_index(stem, other_index)) == 0  # invalidated
+
+
+def test_journal_makes_unsaved_labels_survive_a_crash(wl, index, tmp_path):
+    """Write-through is an O(batch) journal append: labels reach disk on
+    every flush even if save() (compaction) never runs, and a torn final
+    line (crash mid-append) is skipped on replay, keeping the rest."""
+    stem = str(tmp_path / "idx")
+    store = LabelStore.for_index(stem, index)
+    eng = QueryEngine(index, wl)
+    store.attach(eng.broker, eng)
+    eng.broker.fetch(np.arange(10))   # flush -> journal append, no save()
+    eng.broker.fetch(np.arange(10, 17))
+    assert store.journal_path.exists()
+    assert len(store) == 17
+
+    # simulated crash: process gone, only the (uncompacted) files remain
+    revived = LabelStore.for_index(stem, index)
+    assert len(revived) == 17
+    assert sorted(revived.labels) == list(range(17))
+
+    # torn tail: a crash mid-append leaves half a JSON line
+    with open(store.journal_path, "a") as f:
+        f.write('{"ids": [99], "anno')
+    survivor = LabelStore.for_index(stem, index)
+    assert len(survivor) == 17 and 99 not in survivor.labels
+
+    # compaction folds the journal into the snapshot and truncates it
+    survivor.save()
+    assert not survivor.journal_path.exists()
+    assert len(LabelStore.for_index(stem, index)) == 17
+
+
+def test_stale_other_lineage_files_are_not_appended_to(wl, index, tmp_path):
+    """attach() over stale files from another lineage compacts first, so
+    the journal never mixes generations."""
+    stem = str(tmp_path / "idx")
+    stale = LabelStore.open(stem, index_version=77)  # some other lineage
+    stale.update({3: 0.5})
+    stale.save()
+
+    store = LabelStore.for_index(stem, index)
+    assert len(store) == 0
+    eng = QueryEngine(index, wl)
+    store.attach(eng.broker, eng)
+    eng.broker.fetch([1, 2])
+    revived = LabelStore.for_index(stem, index)
+    assert sorted(revived.labels) == [1, 2]  # stale label 3 gone
+
+
+# -- concurrent-session parity ---------------------------------------------
+def _result_signature(res):
+    return (res.kind, res.estimate, res.threshold, res.n_invocations,
+            None if res.selected is None else tuple(int(i)
+                                                    for i in res.selected))
+
+
+def test_threaded_sessions_match_isolated_runs(wl, index):
+    """N sessions over ONE shared engine, executing concurrently from
+    threads, must produce results identical to the same spec lists run
+    isolated (fresh engine each), at no more total fresh-label cost."""
+    spec_lists = [
+        [QuerySpec(kind="aggregation", score="score_count", err=0.15, seed=0),
+         QuerySpec(kind="selection", score="score_has_object", budget=90,
+                   seed=0)],
+        [QuerySpec(kind="aggregation", score="score_has_object", err=0.1,
+                   seed=1),
+         QuerySpec(kind="limit", score="score_has_object", k_results=4)],
+        # overlaps list 0's selection -> cross-session dedup exercises cache
+        [QuerySpec(kind="selection", score="score_has_object", budget=90,
+                   seed=0)],
+        [QuerySpec(kind="aggregation", score="score_count", err=0.08,
+                   seed=3)],
+    ]
+    iso = [QuerySession(QueryEngine(index, wl), specs).execute()
+           for specs in spec_lists]
+    iso_fresh = sum(out.stats["fresh_total"] for out in iso)
+
+    shared = QueryEngine(index, wl)
+    results = [None] * len(spec_lists)
+    errors = []
+    barrier = threading.Barrier(len(spec_lists))
+
+    def run(i):
+        try:
+            barrier.wait(timeout=30)
+            results[i] = QuerySession(shared, spec_lists[i]).execute()
+        except Exception as e:  # noqa: BLE001 - surfaced below
+            errors.append((i, repr(e)))
+
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(len(spec_lists))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+
+    for out_iso, out_conc in zip(iso, results):
+        for r_iso, r_conc in zip(out_iso.results, out_conc.results):
+            assert _result_signature(r_iso) == _result_signature(r_conc)
+    conc_fresh = sum(out.stats["fresh_total"] for out in results)
+    assert conc_fresh <= iso_fresh
+    # every label the broker issued was fresh exactly once
+    assert shared.broker.stats["fresh"] == len(shared.broker.cache)
+
+
+# -- HTTP server ------------------------------------------------------------
+@pytest.fixture()
+def server(wl, index, tmp_path):
+    stem = str(tmp_path / "idx")
+    store = LabelStore.open(stem, index.version)
+    engine = QueryEngine(index, wl)
+    store.attach(engine.broker, engine)
+    srv = QueryServer(engine, port=0, admission_window=0.05,
+                      store=store).start()
+    yield srv
+    srv.shutdown()
+
+
+def test_server_end_to_end_repeat_is_free(server, wl, index, tmp_path):
+    client = QueryClient(server.url)
+    client.wait_ready(10)
+    specs = [s.to_dict() for s in SPECS]
+    out1 = client.query(specs)
+    assert len(out1["results"]) == len(specs)
+    assert out1["request"]["fresh"] > 0
+    assert out1["results"][0]["estimate"] is not None
+
+    out2 = client.query(specs)  # same engine, warm cache
+    assert out2["request"]["fresh"] == 0
+    for a, b in zip(out1["results"], out2["results"]):
+        assert a.get("estimate") == b.get("estimate")
+        assert a.get("selected_head") == b.get("selected_head")
+
+    stats = client.stats()
+    assert stats["server"]["requests"] == 2
+    assert stats["server"]["errors"] == 0
+    assert stats["accounts"]["fresh_total"] == out1["request"]["fresh"]
+    assert stats["store"]["n_labels"] == stats["broker"]["fresh"]
+    assert stats["index"]["records"] == index.n_records
+
+    # cold HTTP restart against the persisted store: repeat costs nothing
+    server.shutdown()
+    store2 = LabelStore.open(str(tmp_path / "idx"), index.version)
+    eng2 = QueryEngine(index, wl)
+    store2.attach(eng2.broker, eng2)
+    srv2 = QueryServer(eng2, port=0, store=store2).start()
+    try:
+        c2 = QueryClient(srv2.url)
+        c2.wait_ready(10)
+        out3 = c2.query(specs)
+        assert out3["request"]["fresh"] == 0
+        assert out3["results"][0]["estimate"] == out1["results"][0]["estimate"]
+    finally:
+        srv2.shutdown()
+
+
+def test_server_admission_window_coalesces_concurrent_posts(wl, index):
+    engine = QueryEngine(index, wl)
+    srv = QueryServer(engine, port=0, admission_window=1.0).start()
+    try:
+        client = QueryClient(srv.url)
+        client.wait_ready(10)
+        barrier = threading.Barrier(2)
+        outs = [None, None]
+
+        def post(i, spec):
+            barrier.wait(timeout=30)
+            outs[i] = client.query([spec])
+
+        threads = [
+            threading.Thread(target=post, args=(0, {
+                "kind": "aggregation", "score": "score_count", "err": 0.2})),
+            threading.Thread(target=post, args=(1, {
+                "kind": "selection", "score": "score_has_object",
+                "budget": 50})),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert outs[0] is not None and outs[1] is not None
+        # both submissions rode one shared session (joint planning + one
+        # combined flush), and each got back exactly its own results
+        stats = client.stats()
+        assert stats["server"]["sessions"] == 1
+        assert stats["server"]["coalesced"] == 1
+        assert outs[0]["session"]["coalesced_requests"] == 2
+        assert outs[0]["results"][0]["kind"] == "aggregation"
+        assert outs[1]["results"][0]["kind"] == "selection"
+    finally:
+        srv.shutdown()
+
+
+def test_server_budgeted_submission_never_coalesced(wl, index):
+    engine = QueryEngine(index, wl)
+    srv = QueryServer(engine, port=0, admission_window=0.5).start()
+    try:
+        client = QueryClient(srv.url)
+        client.wait_ready(10)
+        out = client.query([{"kind": "selection", "score": "score_has_object",
+                             "budget": 500}], budget=60)
+        assert out["session"]["coalesced_requests"] == 1
+        assert out["session"]["budget"] == 60
+        assert out["request"]["fresh"] <= 60
+    finally:
+        srv.shutdown()
+
+
+def test_submit_after_shutdown_fails_fast(wl, index):
+    """A submission racing with shutdown must not hang until the request
+    timeout: submit() refuses once shutdown began."""
+    srv = QueryServer(QueryEngine(index, wl), port=0).start()
+    srv.shutdown()
+    with pytest.raises(RuntimeError, match="shutting down"):
+        srv.submit([QuerySpec(kind="aggregation", score="score_count")])
+
+
+def test_server_rejects_malformed_specs(wl, index):
+    engine = QueryEngine(index, wl)
+    srv = QueryServer(engine, port=0, admission_window=0.0).start()
+    try:
+        client = QueryClient(srv.url)
+        client.wait_ready(10)
+        from repro.serve.client import ServerError
+        with pytest.raises(ServerError, match="unknown QuerySpec fields"):
+            client.query([{"kind": "aggregation", "bogus": 1}])
+        with pytest.raises(ServerError, match="no specs"):
+            client.query([])
+        # a spec that fails at plan time comes back 400, not a hung request
+        with pytest.raises(ServerError, match="budget"):
+            client.query([{"kind": "selection", "score": "score_has_object"}])
+    finally:
+        srv.shutdown()

@@ -130,8 +130,9 @@ def test_save_load_query_roundtrip_with_schema_annotations(tmp_path):
     assert r1.n_invocations == r2.n_invocations
 
 
-def test_load_legacy_pickle_fallback(tmp_path):
-    """Pre-versioned indexes (.npz + .ann.pkl) still load, with a warning."""
+def test_load_legacy_pickle_raises_migration_error(tmp_path):
+    """The one-release .ann.pkl read fallback is gone: loading a legacy
+    pickle index fails with a clear migration error, not a pickle.load."""
     import dataclasses
     import pickle
 
@@ -144,14 +145,50 @@ def test_load_legacy_pickle_fallback(tmp_path):
     with open(stem.with_suffix(".ann.pkl"), "wb") as f:
         pickle.dump({"annotations": idx.annotations,
                      "cost": dataclasses.asdict(idx.cost)}, f)
-    with pytest.warns(DeprecationWarning, match="legacy pickle"):
-        idx2 = TastiIndex.load(str(stem))
-    assert idx2.annotations == idx.annotations
-    np.testing.assert_allclose(idx2.topk_d2, idx.topk_d2)
-    # re-saving migrates to the safe format and drops the stale pickle
-    idx2.save(str(stem))
-    assert stem.with_suffix(".meta.json").exists()
-    assert not stem.with_suffix(".ann.pkl").exists()
+    with pytest.raises(ValueError, match="legacy pickle.*re-save"):
+        TastiIndex.load(str(stem))
+    # a bare stem with neither format still reports file-not-found
+    with pytest.raises(FileNotFoundError):
+        TastiIndex.load(str(tmp_path / "nothing-here"))
+
+
+def test_save_is_atomic_no_temp_litter(tmp_path):
+    """save() writes temp files then renames: after a save the directory
+    holds exactly the two artifacts, and a failing save (an annotation that
+    cannot be encoded) touches no file at all — encoding happens first."""
+    x = _embs(80, 8)
+    idx = _build_index(x, n_reps=8, k=2)
+    stem = tmp_path / "atomic"
+    idx.save(str(stem))
+    names = sorted(f.name for f in tmp_path.iterdir())
+    assert names == ["atomic.meta.json", "atomic.npz"]
+
+    bad = _build_index(x, n_reps=8, k=2)
+    bad.annotations[0] = object()  # not JSON-encodable -> save raises
+    with pytest.raises(TypeError):
+        bad.save(str(tmp_path / "torn"))
+    assert not (tmp_path / "torn.meta.json").exists()
+    assert not (tmp_path / "torn.npz").exists()
+    assert not list(tmp_path.glob("*.tmp"))
+    # the earlier good artifacts are untouched
+    TastiIndex.load(str(stem))
+
+
+def test_load_detects_mixed_generation_pair(tmp_path):
+    """The npz and meta.json are each atomic but not one transaction: a
+    crash between the two renames leaves mixed generations, which load()
+    must detect via the annotations/rep_ids length cross-check."""
+    x = _embs(120, 8)
+    idx = _build_index(x, n_reps=8, k=2)
+    stem = tmp_path / "idx"
+    idx.save(str(stem))
+    old_meta = stem.with_suffix(".meta.json").read_bytes()
+    pool = np.setdiff1d(np.arange(len(x)), idx.rep_ids)
+    idx.crack(pool[:3], [float(i) for i in pool[:3]])
+    idx.save(str(stem))  # new generation: 11 reps
+    stem.with_suffix(".meta.json").write_bytes(old_meta)  # simulate the crash
+    with pytest.raises(ValueError, match="torn"):
+        TastiIndex.load(str(stem))
 
 
 def test_crack_bumps_version_only_on_mutation():
