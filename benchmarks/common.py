@@ -7,16 +7,15 @@ independent, so the algorithmic comparison is faithful on CPU.
 """
 from __future__ import annotations
 
-import functools
 import sys
 from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.baselines import train_query_proxy, ProxyConfig
-from repro.core.engine import QueryEngine, QuerySpec
+from repro.core.baselines import ProxyConfig, train_query_proxy
+from repro.core.engine import QueryEngine
 from repro.core.pipeline import TastiConfig, TastiSystem, build_tasti
-from repro.core.schema import TARGET_DNN_COST_S, make_workload
+from repro.core.schema import make_workload
 from repro.core.triplet import TripletConfig
 
 VIDEO_SETS = ("night-street", "taipei", "amsterdam")

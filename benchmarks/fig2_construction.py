@@ -5,7 +5,6 @@ distance computation; BlazeIt = target DNN over the TMAS (10x budget).
 Seconds come from the paper-measured cost model (3 fps target, 12k fps
 embedder); the ratio is the reproduced claim (paper: ~10x cheaper).
 """
-import numpy as np
 
 from benchmarks import common
 from repro.core.schema import TARGET_DNN_COST_S

@@ -1,6 +1,5 @@
 """Fig. 3: construction cost vs aggregation performance for a range of TASTI
 parameters vs the BlazeIt point."""
-import numpy as np
 
 from benchmarks import common
 from repro.core.queries.aggregation import aggregate_control_variates

@@ -12,7 +12,9 @@ def run(quick: bool = False):
     ds = "night-street"
     wl = common.get_workload(ds, quick)
     truth = common.truth_vector(wl, "score_left_side") > 0.5
-    oracle = lambda ids: truth[ids].astype(float)
+
+    def oracle(ids):
+        return truth[ids].astype(float)
     budget = 300 if quick else 500
     bl = common.get_blazeit_scores(ds, "score_left_side", quick, classify=True)
     seeds = range(2 if quick else 4)

@@ -7,7 +7,6 @@ through the oracle broker (one combined ``target_dnn_batch`` flush), and
 dedups across specs — so it must issue strictly fewer fresh target-DNN
 records than the isolated runs.  Metric: fresh labeled records (the paper's
 query cost) and oracle microbatches."""
-import numpy as np
 
 from benchmarks import common
 from repro.core.engine import QueryEngine, QuerySpec

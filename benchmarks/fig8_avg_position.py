@@ -12,7 +12,9 @@ def run(quick: bool = False):
     ds = "night-street"
     wl = common.get_workload(ds, quick)
     truth = common.truth_vector(wl, "score_mean_x")
-    oracle = lambda ids: truth[ids]
+
+    def oracle(ids):
+        return truth[ids]
     seeds = range(2 if quick else 3)
 
     def mean_inv(proxy, use_cv=True):

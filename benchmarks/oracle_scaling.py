@@ -1,0 +1,153 @@
+"""Oracle sharding scaling: flush latency and queries/s vs replica count.
+
+The unit under test is the serving stack's expensive path — an
+:class:`~repro.core.broker.OracleBroker` flush — against a sleep-calibrated
+synthetic target DNN (fixed per-batch setup cost plus per-id cost, like real
+batched inference; ``time.sleep`` releases the GIL, so replicas genuinely
+overlap, as a real model would).  For each replica count we measure
+
+* **flush latency / labels per second** — one big microbatched flush of
+  ``n_ids`` pending ids;
+* **queries/s** — a train of smaller request+flush cycles (each cycle is
+  one query's oracle demand hitting the broker).
+
+Asserted, not just reported: >=1.5x flush-throughput speedup at 4 replicas
+over 1, and byte-identical labels plus identical fresh/cached accounting at
+every replica count (sharding must never change an answer or a charge).
+
+    PYTHONPATH=src python -m benchmarks.oracle_scaling --quick --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.broker import OracleBroker
+from repro.core.oracle_pool import OraclePool
+
+REPLICA_COUNTS = (1, 2, 4)
+SPEEDUP_FLOOR = 1.5          # required flush-throughput gain at 4 replicas
+PER_BATCH_S = 0.004          # fixed cost per target_dnn_batch call
+PER_ID_S = 0.00005           # marginal cost per id
+
+
+def _sleepy_oracle(per_batch_s: float = PER_BATCH_S,
+                   per_id_s: float = PER_ID_S):
+    """A calibrated stand-in for batched target-DNN inference."""
+    def annotate(ids):
+        time.sleep(per_batch_s + per_id_s * len(ids))
+        return [int(i) * 2 for i in ids]
+    return annotate
+
+
+def _measure(n_replicas: int, n_ids: int, max_batch: int,
+             n_queries: int, query_ids: int) -> Dict[str, object]:
+    annotate = _sleepy_oracle()
+    pool = (OraclePool(annotate, n_replicas=n_replicas)
+            if n_replicas > 1 else None)
+    broker = OracleBroker(annotate, max_batch=max_batch, pool=pool)
+    acct = broker.account("bench")
+    try:
+        # one big flush: the latency a session's combined prefetch pays
+        broker.request(np.arange(n_ids), account=acct)
+        t0 = time.perf_counter()
+        broker.flush()
+        flush_s = time.perf_counter() - t0
+        labels = broker.fetch(np.arange(n_ids), account=acct)
+
+        # a train of query-sized cycles: fresh ids each, flushed per query
+        t0 = time.perf_counter()
+        for q in range(n_queries):
+            lo = n_ids + q * query_ids
+            broker.fetch(np.arange(lo, lo + query_ids), account=acct)
+        queries_s = time.perf_counter() - t0
+    finally:
+        if pool is not None:
+            pool.close()
+    return {
+        "replicas": n_replicas,
+        "flush_latency_s": flush_s,
+        "labels_per_s": n_ids / max(flush_s, 1e-9),
+        "queries_per_s": n_queries / max(queries_s, 1e-9),
+        "labels": labels,
+        "fresh": acct.fresh,
+        "cached": acct.cached,
+        "broker_fresh": broker.stats["fresh"],
+        "broker_cached": broker.stats["cached"],
+    }
+
+
+def scaling(quick: bool = False) -> Dict[str, Dict[str, object]]:
+    """Measurements per replica count, parity-checked against 1 replica."""
+    n_ids = 512 if quick else 2048
+    n_queries = 4 if quick else 8
+    query_ids = 64 if quick else 128
+    out: Dict[str, Dict[str, object]] = {}
+    for r in REPLICA_COUNTS:
+        out[str(r)] = _measure(r, n_ids, max_batch=32,
+                               n_queries=n_queries, query_ids=query_ids)
+    base = out["1"]
+    for r in REPLICA_COUNTS[1:]:
+        m = out[str(r)]
+        if m["labels"] != base["labels"]:
+            raise AssertionError(
+                f"{r}-replica labels differ from the single-oracle path")
+        acct_keys = ("fresh", "cached", "broker_fresh", "broker_cached")
+        if any(m[k] != base[k] for k in acct_keys):
+            raise AssertionError(
+                f"{r}-replica accounting differs from single-oracle: "
+                + ", ".join(f"{k}={m[k]} vs {base[k]}" for k in acct_keys))
+    speedup = (base["flush_latency_s"]
+               / max(out["4"]["flush_latency_s"], 1e-9))
+    if speedup < SPEEDUP_FLOOR:
+        raise AssertionError(
+            f"4-replica flush speedup {speedup:.2f}x < required "
+            f"{SPEEDUP_FLOOR}x (1 replica: {base['flush_latency_s']:.3f}s, "
+            f"4 replicas: {out['4']['flush_latency_s']:.3f}s)")
+    for m in out.values():
+        m.pop("labels")  # bulky; parity already asserted
+        m["speedup_vs_1"] = (base["flush_latency_s"]
+                             / max(m["flush_latency_s"], 1e-9))
+    return out
+
+
+def run(quick: bool = False) -> List[tuple]:
+    """Benchmark-harness entry point: CSV rows per replica count."""
+    out = scaling(quick)
+    rows = []
+    for r in REPLICA_COUNTS:
+        m = out[str(r)]
+        rows.append((f"oracle_scaling/replicas_{r}", "flush_latency_s",
+                     round(m["flush_latency_s"], 4)))
+        rows.append((f"oracle_scaling/replicas_{r}", "labels_per_s",
+                     round(m["labels_per_s"], 1)))
+        rows.append((f"oracle_scaling/replicas_{r}", "queries_per_s",
+                     round(m["queries_per_s"], 2)))
+        rows.append((f"oracle_scaling/replicas_{r}", "speedup_vs_1",
+                     round(m["speedup_vs_1"], 2)))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="flush latency and queries/s vs oracle replica count")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="also write the full measurements as JSON (the CI "
+                         "bench-oracle-scaling artifact)")
+    args = ap.parse_args(argv)
+    out = scaling(args.quick)
+    payload = {"quick": args.quick, "speedup_floor": SPEEDUP_FLOOR,
+               "speedup_at_4": out["4"]["speedup_vs_1"], "replicas": out}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ MODULES = [
     "fig8_avg_position",
     "table1_no_guarantees", "table2_cracking", "fig9_factor_analysis",
     "fig10_lesion", "fig11_buckets", "fig12_train_examples",
-    "fig13_embedding_size", "serve_throughput",
+    "fig13_embedding_size", "serve_throughput", "oracle_scaling",
 ]
 
 

@@ -29,7 +29,8 @@ def run(quick: bool = False):
         "blazeit": common.get_blazeit_scores(ds, "score_count", quick),
     }
     for name, proxy in systems.items():
-        err = abs(float(proxy.mean()) - float(truth_cnt.mean())) /             max(float(truth_cnt.mean()), 1e-9) * 100
+        err = (abs(float(proxy.mean()) - float(truth_cnt.mean()))
+               / max(float(truth_cnt.mean()), 1e-9) * 100)
         rows.append((f"table1/{ds}/agg_{name}", "pct_error", round(err, 2)))
 
     sel_systems = {

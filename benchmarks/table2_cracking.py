@@ -4,7 +4,6 @@ the index), run the second query; report before/after.  Each cell executes
 as one mid-session-cracking ``QuerySession`` (specs keep
 ``reuse_labels=False`` so before/after invocation counts stay comparable);
 fresh systems per cell because cracking mutates the index."""
-import numpy as np
 
 from benchmarks import common
 from repro.core.engine import QuerySpec

@@ -22,7 +22,7 @@ import re
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,20 +7,19 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.configs.base import (SHAPES, SHAPE_BY_NAME, LayerSpec, ModelConfig,
+from repro.configs.base import (SHAPE_BY_NAME, SHAPES, LayerSpec, ModelConfig,
                                 ShapeConfig, cell_is_runnable)
-
+from repro.configs.h2o_danube3_4b import CONFIG as _danube
 from repro.configs.jamba_1_5_large_398b import CONFIG as _jamba
 from repro.configs.llama3_2_1b import CONFIG as _llama
-from repro.configs.phi3_medium_14b import CONFIG as _phi3
-from repro.configs.qwen3_1_7b import CONFIG as _qwen3
-from repro.configs.h2o_danube3_4b import CONFIG as _danube
-from repro.configs.qwen2_vl_7b import CONFIG as _qwen2vl
-from repro.configs.xlstm_350m import CONFIG as _xlstm
-from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
 from repro.configs.olmoe_1b_7b import CONFIG as _olmoe
+from repro.configs.phi3_medium_14b import CONFIG as _phi3
+from repro.configs.qwen2_vl_7b import CONFIG as _qwen2vl
+from repro.configs.qwen3_1_7b import CONFIG as _qwen3
 from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3moe
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
 from repro.configs.tasti_embedder import CONFIG as _tasti_embedder
+from repro.configs.xlstm_350m import CONFIG as _xlstm
 
 _REGISTRY: Dict[str, ModelConfig] = {c.name: c for c in [
     _jamba, _llama, _phi3, _qwen3, _danube, _qwen2vl, _xlstm, _seamless,

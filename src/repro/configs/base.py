@@ -7,10 +7,9 @@ so configs are importable everywhere (including before device initialization in
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Tuple
 
 
 def _round_up(x: int, m: int) -> int:
@@ -154,7 +153,8 @@ class ModelConfig:
 
         def mlstm_params() -> int:
             di = self.mlstm_inner
-            return d * 2 * di + 3 * di * di // max(self.n_heads, 1) * 0 + 3 * di * di + di * d + 3 * di
+            return (d * 2 * di + 3 * di * di // max(self.n_heads, 1) * 0
+                    + 3 * di * di + di * d + 3 * di)
 
         def slstm_params() -> int:
             # block-diagonal (per-head) recurrent + input projections, 4 gates

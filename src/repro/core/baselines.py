@@ -12,15 +12,14 @@
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.embedder import EmbedderConfig, embed, embedder_specs, init_embedder
+from repro.core.embedder import EmbedderConfig, embed, init_embedder
 from repro.models.common import ParamSpec, PyTree, init_params
 from repro.optim.adamw import OptimizerConfig, adamw_update, init_opt_state
 

@@ -19,22 +19,32 @@ well-shaped microbatches.  :class:`OracleBroker` owns exactly that seam:
   spec) tracks exactly the fresh labels it caused and the cache hits it was
   served, so per-spec invocation counts stay honest under cross-spec dedup:
   a record labeled for spec A is *fresh* for A and *cached* for B;
-* **thread safety** — one reentrant lock protects the pending queue, cache,
-  stats, and account registry, so concurrent :class:`~repro.core.session.
-  QuerySession` s (the serving layer's worker pool) share one broker.  The
-  lock is held *across* ``target_dnn_batch`` calls: the target DNN is the
-  single expensive resource, so labeling is serialized anyway, and holding
-  the lock makes in-flight dedup exact — a thread demanding an id another
-  thread is mid-flushing simply blocks until the label is cached.
+* **thread safety via reservation** — one reentrant lock protects the
+  pending queue, cache, stats, and account registry, so concurrent
+  :class:`~repro.core.session.QuerySession` s (the serving layer's worker
+  pool) share one broker.  The lock is *not* held across
+  ``target_dnn_batch``: a flush **reserves** its pending ids (marks them
+  in-flight under the lock), labels them outside it, and **publishes** the
+  results under the lock again.  In-flight dedup stays exact — a request for
+  a reserved id rides along without re-labeling, and a demand-read blocks on
+  the broker's condition until the reservation publishes.  On failure the
+  reservation is rolled back into the pending queue with no counts charged;
+* **sharded labeling** — with an :class:`~repro.core.oracle_pool.OraclePool`
+  attached, each flush's microbatches are dispatched to N target-DNN replica
+  workers concurrently (work-stealing, per-sub-batch retry) and the results
+  are published in pending order, so labels, accounting, and the write-
+  through stream are byte-identical to the single-oracle path.
 """
 from __future__ import annotations
 
 import threading
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
+
+from repro.core.oracle_pool import OraclePool, OraclePoolClosed
 
 
 @dataclass
@@ -72,10 +82,18 @@ class LabelFuture:
             return all(i in self._broker.cache for i in self._ids)
 
     def result(self) -> List[Any]:
-        with self._broker._lock:
-            if not self.done():
-                self._broker.flush()
-            return [self._broker.cache[i] for i in self._ids]
+        b = self._broker
+        while True:
+            with b._cond:
+                if all(i in b.cache for i in self._ids):
+                    return [b.cache[i] for i in self._ids]
+                if not any(i in b._pending for i in self._ids):
+                    # everything still missing is reserved by another
+                    # thread's in-flight flush: wait for its publish
+                    # (timeout is lost-wakeup insurance; the loop re-checks)
+                    b._cond.wait(timeout=0.25)
+                    continue
+            b.flush()  # outside the lock: flush reserves/labels/publishes
 
 
 class OracleBroker:
@@ -83,19 +101,29 @@ class OracleBroker:
 
     ``annotate(ids) -> list`` is the raw oracle (``workload.
     target_dnn_batch``); every call to it goes through :meth:`flush` in
-    chunks of at most ``max_batch`` ids.
+    chunks of at most ``max_batch`` ids.  With ``pool`` set (an
+    :class:`~repro.core.oracle_pool.OraclePool`), flushes are sharded across
+    the pool's replica workers instead of calling ``annotate`` inline;
+    ``pool`` may be swapped at any time between flushes (the engine's
+    ``oracle_replicas`` knob does exactly that).
     """
 
     def __init__(self, annotate: Callable[[np.ndarray], Sequence[Any]],
                  max_batch: int = 64,
-                 cache: Optional[Dict[int, Any]] = None):
+                 cache: Optional[Dict[int, Any]] = None,
+                 pool: Optional[OraclePool] = None):
         if max_batch <= 0:
             raise ValueError(f"max_batch must be positive, got {max_batch}")
         self.annotate = annotate
         self.max_batch = int(max_batch)
+        self.pool = pool
         self.cache: Dict[int, Any] = {} if cache is None else cache
         self._pending: Dict[int, Optional[OracleAccount]] = {}  # id -> owner
+        # ids reserved by an in-flight flush (labeled outside the lock);
+        # requests for them ride along, demand-reads wait on _cond
+        self._inflight: Dict[int, Optional[OracleAccount]] = {}
         self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
         # bounded: a long-lived server issues one account per served spec,
         # so retaining them all would grow without bound; global totals live
         # in self.stats, this ring only feeds the /stats "recent" view
@@ -130,7 +158,8 @@ class OracleBroker:
         """A consistent copy of ``stats`` (plus cache/pending sizes)."""
         with self._lock:
             return {**self.stats, "cache_size": len(self.cache),
-                    "n_pending": len(self._pending)}
+                    "n_pending": len(self._pending),
+                    "n_inflight": len(self._inflight)}
 
     # -- persistence hooks ---------------------------------------------------
     def seed(self, labels: Dict[int, Any]) -> int:
@@ -177,10 +206,11 @@ class OracleBroker:
                         self.stats["cached"] += 1
                         if account is not None:
                             account.cached += 1
-                elif i in self._pending:
+                elif i in self._pending or i in self._inflight:
                     if account is not None and i in account._credit:
-                        # own unflushed prefetch: this demand-read consumes
-                        # the credit; the fresh charge lands at flush
+                        # own unflushed (or mid-flush) prefetch: this demand-
+                        # read consumes the credit; the fresh charge lands at
+                        # flush publish
                         account._credit.discard(i)
                     else:
                         self.stats["cached"] += 1
@@ -203,7 +233,8 @@ class OracleBroker:
         with self._lock:
             for raw in ids:
                 i = int(raw)
-                if i in self.cache or i in self._pending:
+                if i in self.cache or i in self._pending \
+                        or i in self._inflight:
                     continue
                 self._pending[i] = account
                 if account is not None:
@@ -229,14 +260,12 @@ class OracleBroker:
             return self.request(ids, account=account).result()
         with self._lock:
             self.stats["requests"] += len(ids)
-            labeled: Dict[int, Any] = {}
-            for start in range(0, len(ids), self.max_batch):
-                chunk = ids[start:start + self.max_batch]
-                anns = self.annotate(chunk)
-                self.stats["batches"] += 1
-                for i, a in zip(chunk, anns):
-                    self.cache[int(i)] = a
-                    labeled[int(i)] = a
+        # cache-bypassing reads label OUTSIDE the lock too (same reservation
+        # discipline as flush, minus the dedup: every id is re-labeled)
+        labeled, batches = self._label(ids)
+        with self._lock:
+            self.cache.update(labeled)
+            self.stats["batches"] += batches
             self.stats["fresh"] += len(ids)
             if account is not None:
                 account.fresh += len(ids)
@@ -244,7 +273,32 @@ class OracleBroker:
             if len(ids):
                 self.stats["flushes"] += 1
             self._notify_fresh(labeled)
+            self._cond.notify_all()
             return [self.cache[int(i)] for i in ids]
+
+    def _label(self, ids: np.ndarray) -> Tuple[Dict[int, Any], int]:
+        """Label ``ids`` — sharded across the replica pool when one is
+        attached, inline microbatches otherwise.  Called WITHOUT the broker
+        lock; returns ``({id: annotation}, n_batches)``."""
+        pool = self.pool
+        if pool is not None and len(ids):
+            try:
+                return pool.run(ids, self.max_batch)
+            except OraclePoolClosed:
+                # the pool was closed under us (a concurrent replica-count
+                # resize): retry once with the current pool, else inline
+                current = self.pool
+                if current is not None and current is not pool:
+                    return current.run(ids, self.max_batch)
+        labeled: Dict[int, Any] = {}
+        batches = 0
+        for start in range(0, len(ids), self.max_batch):
+            chunk = ids[start:start + self.max_batch]
+            anns = self.annotate(chunk)
+            batches += 1
+            for i, a in zip(chunk, anns):
+                labeled[int(i)] = a
+        return labeled, batches
 
     # -- drain ---------------------------------------------------------------
     @property
@@ -255,13 +309,24 @@ class OracleBroker:
     def flush(self) -> int:
         """Label everything pending, in microbatches of ``max_batch``.
         Fresh charges land on the account that enqueued each id.  Returns
-        the number of records labeled."""
+        the number of records labeled.
+
+        Three phases (the reservation scheme): **reserve** — pending ids move
+        to the in-flight map under the lock, so concurrent requests dedup
+        against them exactly; **label** — outside the lock, inline or sharded
+        across the replica pool, so other threads keep enqueueing (and other
+        flushes keep labeling) meanwhile; **publish** — results land in the
+        cache in pending order under the lock, owners are charged fresh, the
+        write-through listeners see one ordered batch, and waiters wake.  If
+        labeling fails, the reservation rolls back into the pending queue
+        with nothing charged.
+        """
         with self._lock:
             if not self._pending:
                 return 0
             queued = list(self._pending.items())  # insertion order
             self._pending.clear()
-            pending = []
+            reserved: List[Tuple[int, Optional[OracleAccount]]] = []
             for i, owner in queued:
                 # a forced fetch() may have labeled a pending id meanwhile:
                 # the enqueuer is served from cache, not charged fresh
@@ -273,22 +338,41 @@ class OracleBroker:
                         if owner is not None:
                             owner.cached += 1
                 else:
-                    pending.append((i, owner))
-            if not pending:
+                    self._inflight[i] = owner
+                    reserved.append((i, owner))
+            if not reserved:
                 return 0
+            ids = np.asarray([i for i, _ in reserved], np.int64)
+        try:
+            results, batches = self._label(ids)
+            missing = [i for i, _ in reserved if i not in results]
+            if missing:
+                raise RuntimeError(
+                    f"oracle returned no label for {len(missing)} of "
+                    f"{len(reserved)} flushed ids")
+        except BaseException:
+            with self._lock:
+                # roll the reservation back: nothing was published, nothing
+                # is charged, and the ids are pending again for a retry
+                for i, owner in reserved:
+                    self._inflight.pop(i, None)
+                    if i not in self.cache and i not in self._pending:
+                        self._pending[i] = owner
+                self._cond.notify_all()
+            raise
+        with self._lock:
             labeled: Dict[int, Any] = {}
-            for start in range(0, len(pending), self.max_batch):
-                chunk = pending[start:start + self.max_batch]
-                chunk_ids = np.asarray([i for i, _ in chunk], np.int64)
-                anns = self.annotate(chunk_ids)
-                self.stats["batches"] += 1
-                for (i, owner), a in zip(chunk, anns):
-                    self.cache[i] = a
-                    labeled[i] = a
-                    self.stats["fresh"] += 1
-                    if owner is not None:
-                        owner.fresh += 1
-                        owner.labeled.append(i)
+            for i, owner in reserved:  # publish in pending (insertion) order
+                self._inflight.pop(i, None)
+                a = results[i]
+                self.cache[i] = a
+                labeled[i] = a
+                self.stats["fresh"] += 1
+                if owner is not None:
+                    owner.fresh += 1
+                    owner.labeled.append(i)
+            self.stats["batches"] += batches
             self.stats["flushes"] += 1
             self._notify_fresh(labeled)
-            return len(pending)
+            self._cond.notify_all()
+        return len(reserved)

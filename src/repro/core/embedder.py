@@ -11,9 +11,7 @@ Two backbones:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -35,11 +35,11 @@ from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core import propagation, schema as schema_lib
+# importing repro.core.queries registers the built-in executors
+from repro.core import propagation, queries as _queries, schema as schema_lib  # noqa: F401
 from repro.core.broker import OracleAccount, OracleBroker
 from repro.core.index import TastiIndex
-# importing the package registers the built-in executors
-from repro.core import queries as _queries  # noqa: F401
+from repro.core.oracle_pool import OraclePool
 from repro.core.queries.registry import QueryExecutor, get_executor
 
 PROPAGATION_MODES = ("numeric", "top1", "categorical")
@@ -158,7 +158,9 @@ class QueryEngine:
 
     def __init__(self, index: TastiIndex, workload: Any = None,
                  crack: bool = False, max_oracle_batch: int = 64,
-                 broker: Optional[OracleBroker] = None):
+                 broker: Optional[OracleBroker] = None,
+                 oracle_replicas: int = 1,
+                 oracle_pool: Optional[OraclePool] = None):
         self.index = index
         self.workload = workload
         self.crack_by_default = bool(crack)
@@ -166,6 +168,24 @@ class QueryEngine:
         self._proxy_cache: Dict[Any, np.ndarray] = {}
         self._proxy_cache_version = index.version
         self._broker = broker
+        # oracle sharding: >1 replicas put an OraclePool behind the broker's
+        # microbatcher; an externally-owned pool may be passed in instead
+        self.oracle_replicas = max(1, int(oracle_replicas))
+        self._oracle_pool = oracle_pool
+        self._owns_pool = False
+        if broker is not None:
+            # an injected broker skips the lazy construction below, so the
+            # sharding knob must attach to it here (never silently ignored);
+            # an existing pool on the shared broker wins
+            if broker.pool is not None:
+                self._oracle_pool = broker.pool
+            elif self._oracle_pool is None and self.oracle_replicas > 1:
+                self._oracle_pool = OraclePool(
+                    self._annotate, n_replicas=self.oracle_replicas)
+                self._owns_pool = True
+                broker.pool = self._oracle_pool
+            elif self._oracle_pool is not None:
+                broker.pool = self._oracle_pool
         # guards the proxy cache, stats counters, and index mutation
         # (crack_with) so concurrent sessions can share one engine; always
         # acquired before the broker's lock, never after
@@ -189,12 +209,60 @@ class QueryEngine:
     @property
     def broker(self) -> OracleBroker:
         """The batched, deduplicating seam to ``workload.target_dnn_batch``;
-        its cache is the engine's shared oracle-label cache."""
+        its cache is the engine's shared oracle-label cache.  With
+        ``oracle_replicas > 1`` the broker's flushes are sharded across an
+        :class:`~repro.core.oracle_pool.OraclePool` the engine owns."""
         with self._lock:
             if self._broker is None:
+                if self._oracle_pool is None and self.oracle_replicas > 1:
+                    self._oracle_pool = OraclePool(
+                        self._annotate, n_replicas=self.oracle_replicas)
+                    self._owns_pool = True
                 self._broker = OracleBroker(self._annotate,
-                                            max_batch=self.max_oracle_batch)
+                                            max_batch=self.max_oracle_batch,
+                                            pool=self._oracle_pool)
             return self._broker
+
+    @property
+    def oracle_pool(self) -> Optional[OraclePool]:
+        """The replica pool behind the broker, if sharding is on."""
+        with self._lock:
+            return self._oracle_pool
+
+    def set_oracle_replicas(self, n: int) -> None:
+        """Resize the target-DNN replica pool (the ``oracle_replicas`` knob
+        at run time; sessions with their own setting call this).  Safe
+        between flushes: an in-flight flush keeps the pool it started with
+        (``broker._label`` reads ``broker.pool`` once)."""
+        n = max(1, int(n))
+        with self._lock:
+            if n == self.oracle_replicas and (
+                    n == 1 or self._oracle_pool is not None):
+                return
+            old = self._oracle_pool if self._owns_pool else None
+            pool = (OraclePool(self._annotate, n_replicas=n)
+                    if n > 1 else None)
+            self.oracle_replicas = n
+            self._oracle_pool = pool
+            self._owns_pool = pool is not None
+            if self._broker is not None:
+                self._broker.pool = pool
+        if old is not None:
+            old.close()
+
+    def close(self) -> None:
+        """Detach and stop an engine-owned replica pool (idempotent).  The
+        broker falls back to inline labeling, so the engine stays usable —
+        the serving layer calls this on shutdown."""
+        with self._lock:
+            pool = self._oracle_pool if self._owns_pool else None
+            self._oracle_pool = None
+            self._owns_pool = False
+            self.oracle_replicas = 1
+            if self._broker is not None:
+                self._broker.pool = None
+        if pool is not None:
+            pool.close()
 
     def add_stats(self, **deltas: int) -> None:
         """Atomically bump engine counters (dict ``+=`` is not)."""

@@ -8,9 +8,8 @@ a small random fraction is mixed in for average-case queries (§3.2).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -7,13 +7,13 @@ from __future__ import annotations
 import dataclasses
 import pathlib
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import schema as schema_lib
-from repro.core.fpf import fpf_select, max_intra_cluster_dist
+from repro.core.fpf import fpf_select
 from repro.kernels.distance_topk.ops import distance_topk
 
 

@@ -1,0 +1,257 @@
+"""Oracle replica pool: N target-DNN workers behind one flush.
+
+TASTI prices queries in target-DNN invocations, and once the index makes
+proxy scores cheap the wall-clock bottleneck is how fast those invocations
+can be *driven* (BlazeIt/learned-index lesson: scale out the expensive
+model, not the cheap index).  :class:`OraclePool` is the scale-out seam the
+:class:`~repro.core.broker.OracleBroker` dispatches microbatches to:
+
+* **replicas** — ``n_replicas`` worker threads, each wrapping one target-DNN
+  callable.  By default every replica shares the same ``annotate`` callable
+  (it must then be thread-safe — the synthetic workloads' ``target_dnn_batch``
+  is pure reads); pass ``replicas=[fn0, fn1, ...]`` for distinct instances
+  (separate devices, processes behind RPC, or fault-injection doubles);
+* **size-aware sharding** — a flush of ``n`` ids splits into sub-batches of
+  ``min(max_batch, ceil(n / (n_replicas * oversub)))`` ids, so small flushes
+  still fan out across every replica and large ones keep well-shaped
+  microbatches;
+* **work stealing** — sub-batches go into one shared queue that idle
+  replicas pull from, so a slow replica never straggles the flush: the fast
+  ones drain its share;
+* **retry on a surviving replica** — a sub-batch whose replica raised is
+  re-queued for the others; only when *every* replica has failed it does the
+  flush fail (and the broker's reservation scheme then restores the ids to
+  pending, leaving all accounting untouched);
+* **in-order reassembly is the caller's** — :meth:`run` returns a plain
+  ``{id: annotation}`` dict; the broker publishes results in its own pending
+  order, so label streams (and the :class:`~repro.serve.store.LabelStore`
+  journal) are identical to the single-oracle path.
+
+The pool is intentionally stdlib-thread based, matching the serve layer: the
+target DNN is assumed to release the GIL (real inference does; the synthetic
+oracles are trivial), so replicas genuinely overlap.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from math import ceil
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_STOP = object()
+
+
+class OraclePoolError(RuntimeError):
+    """A sub-batch failed on every replica (the flush could not complete)."""
+
+
+class OraclePoolClosed(RuntimeError):
+    """:meth:`OraclePool.run` was called on a closed pool (e.g. a concurrent
+    replica-count resize swapped it out); the caller should retry against
+    its current pool or label inline."""
+
+
+class _FlushJob:
+    """One :meth:`OraclePool.run` call: its sub-batches, results, and the
+    condition its caller blocks on.  Workers of several concurrent jobs share
+    the pool's task queue; each job completes independently."""
+
+    __slots__ = ("chunks", "tried", "results", "batches", "remaining",
+                 "error", "cond")
+
+    def __init__(self, chunks: List[np.ndarray]):
+        self.chunks = chunks
+        # per-chunk set of replica indices that already failed it
+        self.tried: List[set] = [set() for _ in chunks]
+        self.results: Dict[int, Any] = {}
+        self.batches = 0                 # successful annotate() calls
+        self.remaining = len(chunks)
+        self.error: Optional[BaseException] = None
+        self.cond = threading.Condition()
+
+
+class OraclePool:
+    """A pool of target-DNN replica workers.
+
+        pool = OraclePool(workload.target_dnn_batch, n_replicas=4)
+        labels, batches = pool.run(ids, max_batch=64)   # {id: annotation}
+        pool.close()
+
+    ``oversub`` controls sharding granularity: each flush is split into about
+    ``n_replicas * oversub`` sub-batches (capped at ``max_batch`` ids each)
+    so work stealing has slack to route around a slow replica.
+    """
+
+    def __init__(self, annotate: Optional[Callable] = None,
+                 n_replicas: int = 2, *,
+                 replicas: Optional[Sequence[Callable]] = None,
+                 oversub: int = 2, name: str = "oracle-replica"):
+        if replicas is None:
+            if annotate is None:
+                raise ValueError("OraclePool needs `annotate` or `replicas`")
+            if n_replicas <= 0:
+                raise ValueError(
+                    f"n_replicas must be positive, got {n_replicas}")
+            replicas = [annotate] * int(n_replicas)
+        replicas = list(replicas)
+        if not replicas:
+            raise ValueError("OraclePool needs at least one replica")
+        self.n_replicas = len(replicas)
+        self.oversub = max(1, int(oversub))
+        self._tasks: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)  # signals _active == 0
+        self._active = 0                              # run() calls in flight
+        self._closed = False
+        self.stats: Dict[str, Any] = {
+            "flushes": 0,        # run() calls
+            "dispatched": 0,     # sub-batches enqueued
+            "batches": 0,        # successful annotate() calls
+            "retries": 0,        # sub-batches re-queued after a failure
+            "failures": 0,       # annotate() calls that raised
+            "per_replica": [0] * self.n_replicas,          # completed batches
+            "per_replica_failures": [0] * self.n_replicas,
+        }
+        self._threads = [
+            threading.Thread(target=self._worker, args=(ridx, fn),
+                             name=f"{name}-{ridx}", daemon=True)
+            for ridx, fn in enumerate(replicas)]
+        for t in self._threads:
+            t.start()
+
+    # -- sharding ------------------------------------------------------------
+    def chunk_size(self, n: int, max_batch: int) -> int:
+        """Sub-batch size for a flush of ``n`` ids: small enough that every
+        replica gets ~``oversub`` batches (stealing slack), never larger than
+        ``max_batch``."""
+        per = ceil(n / (self.n_replicas * self.oversub))
+        return max(1, min(int(max_batch), per))
+
+    # -- the one entry point -------------------------------------------------
+    def run(self, ids, max_batch: int) -> Tuple[Dict[int, Any], int]:
+        """Label ``ids`` across the replicas; blocks until every sub-batch
+        completed (or failed everywhere).  Returns ``({id: annotation},
+        n_batches)``.  Raises :class:`OraclePoolError` if any sub-batch
+        failed on all replicas — the caller's ids are then untouched (no
+        partial publish)."""
+        with self._lock:
+            if self._closed:
+                raise OraclePoolClosed("OraclePool is closed")
+            self.stats["flushes"] += 1
+            self._active += 1
+        try:
+            ids = np.asarray(ids, np.int64).ravel()
+            if len(ids) == 0:
+                return {}, 0
+            size = self.chunk_size(len(ids), max_batch)
+            chunks = [ids[s:s + size] for s in range(0, len(ids), size)]
+            job = _FlushJob(chunks)
+            with self._lock:
+                self.stats["dispatched"] += len(chunks)
+            for ci in range(len(chunks)):
+                self._tasks.put((job, ci))
+            with job.cond:
+                while job.remaining and job.error is None:
+                    job.cond.wait()
+                if job.error is not None:
+                    raise job.error
+                return dict(job.results), job.batches
+        finally:
+            with self._lock:
+                self._active -= 1
+                if self._active == 0:
+                    self._idle.notify_all()
+
+    # -- workers -------------------------------------------------------------
+    def _worker(self, ridx: int, annotate: Callable) -> None:
+        while True:
+            task = self._tasks.get()
+            if task is _STOP:
+                return
+            job, ci = task
+            with job.cond:
+                dead = job.error is not None
+                skip = ridx in job.tried[ci]
+            if dead:
+                continue  # run() already raised; drop the stragglers
+            if skip:
+                # this replica already failed this sub-batch: hand it back
+                # for a survivor and back off so one can pick it up (the
+                # survivors may all be mid-annotate; 10ms bounds the spin
+                # without delaying the handoff noticeably)
+                self._tasks.put(task)
+                time.sleep(0.01)
+                continue
+            chunk = job.chunks[ci]
+            try:
+                anns = annotate(chunk)
+                if len(anns) != len(chunk):
+                    raise OraclePoolError(
+                        f"replica {ridx} returned {len(anns)} annotations "
+                        f"for {len(chunk)} ids")
+            except Exception as e:  # noqa: BLE001 - replica fault barrier
+                with self._lock:
+                    self.stats["failures"] += 1
+                    self.stats["per_replica_failures"][ridx] += 1
+                with job.cond:
+                    job.tried[ci].add(ridx)
+                    if len(job.tried[ci]) >= self.n_replicas:
+                        job.error = OraclePoolError(
+                            f"sub-batch of {len(chunk)} ids failed on all "
+                            f"{self.n_replicas} replicas "
+                            f"(last: {type(e).__name__}: {e})")
+                        job.cond.notify_all()
+                        continue
+                with self._lock:
+                    self.stats["retries"] += 1
+                self._tasks.put(task)
+                continue
+            with job.cond:
+                for i, a in zip(chunk, anns):
+                    job.results[int(i)] = a
+                job.batches += 1
+                job.remaining -= 1
+                if job.remaining == 0:
+                    job.cond.notify_all()
+            with self._lock:
+                self.stats["batches"] += 1
+                self.stats["per_replica"][ridx] += 1
+
+    # -- lifecycle -----------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """A consistent copy of ``stats`` (lists copied too)."""
+        with self._lock:
+            out = dict(self.stats)
+            out["per_replica"] = list(out["per_replica"])
+            out["per_replica_failures"] = list(out["per_replica_failures"])
+            out["n_replicas"] = self.n_replicas
+            return out
+
+    def close(self, timeout: float = 10.0) -> None:
+        """Stop the workers (idempotent).  Drain-safe: waits for in-flight
+        :meth:`run` calls to finish before the stop sentinels are enqueued,
+        so a retry re-queued by a concurrent flush can never land behind a
+        sentinel and strand the flush.  New :meth:`run` calls fail fast
+        (the broker falls back to its current pool / inline labeling)."""
+        deadline = time.monotonic() + timeout
+        with self._idle:
+            if self._closed:
+                return
+            self._closed = True
+            while self._active:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._idle.wait(timeout=remaining):
+                    break
+        for _ in self._threads:
+            self._tasks.put(_STOP)
+        for t in self._threads:
+            t.join(timeout=max(0.1, deadline - time.monotonic()))
+
+    def __enter__(self) -> "OraclePool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

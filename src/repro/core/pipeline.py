@@ -15,18 +15,17 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
-from repro.core import propagation, schema as schema_lib
 from repro.core.baselines import pretrain_embedder
-from repro.core.embedder import EmbedderConfig, embed_all, init_embedder
+from repro.core.embedder import EmbedderConfig, embed_all
 from repro.core.engine import QueryEngine, QueryResult, QuerySpec
 from repro.core.fpf import fpf_select
-from repro.core.session import QuerySession, SessionResult
 from repro.core.index import IndexCost, TastiIndex
+from repro.core.session import QuerySession, SessionResult
 from repro.core.triplet import TripletConfig, mine_triplets, train_embedder
 
 

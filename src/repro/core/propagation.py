@@ -6,10 +6,6 @@ index, so propagation is O(N*k) arithmetic — the paper's key query-time win.
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

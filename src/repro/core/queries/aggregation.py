@@ -9,9 +9,8 @@ mechanism.  Metric: number of target-DNN invocations at a given error bound.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -110,7 +109,8 @@ def aggregate_direct(proxy: np.ndarray) -> float:
 # ---------------------------------------------------------------------------
 # Engine plug-in (repro.core.engine): declarative access to this algorithm.
 # ---------------------------------------------------------------------------
-from repro.core.queries.registry import QueryExecutor, register_executor
+from repro.core.queries.registry import (QueryExecutor,  # noqa: E402
+                                         register_executor)
 
 
 @register_executor

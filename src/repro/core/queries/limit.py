@@ -5,9 +5,8 @@ TASTI recommends k=1 propagation with distance tie-breaks for these (§6.3).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Tuple
+from typing import Callable
 
 import numpy as np
 
@@ -39,8 +38,8 @@ def limit_query(proxy: np.ndarray,
         ids = order[start:start + min(batch, max_inv - examined)]
         labels = oracle(ids)
         done_at = len(ids)
-        for j, (i, l) in enumerate(zip(ids, labels)):
-            if l > 0.5:
+        for j, (i, lab) in enumerate(zip(ids, labels)):
+            if lab > 0.5:
                 found.append(int(i))
                 if len(found) >= k_results:
                     done_at = j + 1
@@ -56,7 +55,8 @@ def limit_query(proxy: np.ndarray,
 # ---------------------------------------------------------------------------
 # Engine plug-in (repro.core.engine): declarative access to this algorithm.
 # ---------------------------------------------------------------------------
-from repro.core.queries.registry import QueryExecutor, register_executor
+from repro.core.queries.registry import (QueryExecutor,  # noqa: E402
+                                         register_executor)
 
 
 @register_executor

@@ -10,9 +10,8 @@ set at the fixed budget (paper fig. 5; lower is better).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Tuple
+from typing import Callable
 
 import numpy as np
 
@@ -99,7 +98,8 @@ def achieved_recall(selected: np.ndarray, truth: np.ndarray) -> float:
 # ---------------------------------------------------------------------------
 # Engine plug-in (repro.core.engine): declarative access to this algorithm.
 # ---------------------------------------------------------------------------
-from repro.core.queries.registry import QueryExecutor, register_executor
+from repro.core.queries.registry import (QueryExecutor,  # noqa: E402
+                                         register_executor)
 
 
 @register_executor

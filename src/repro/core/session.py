@@ -122,19 +122,25 @@ class QuerySession:
 
     ``budget`` caps the batch's worst-case fresh-label demand; ``prefetch``
     disables the preview/flush phase (labels are then fetched on demand,
-    still deduped); ``n_strata`` controls the shared stratified sample.
+    still deduped); ``n_strata`` controls the shared stratified sample;
+    ``oracle_replicas`` (None = leave the engine's setting alone) resizes
+    the target-DNN replica pool behind the broker before execution — results
+    and accounting are identical at any replica count, only flush latency
+    changes.
     """
 
     def __init__(self, engine: QueryEngine,
                  specs: Optional[Sequence[QuerySpec]] = None,
                  budget: Optional[int] = None, prefetch: bool = True,
-                 n_strata: int = 10, seed: int = 0):
+                 n_strata: int = 10, seed: int = 0,
+                 oracle_replicas: Optional[int] = None):
         self.engine = engine
         self.specs: List[QuerySpec] = list(specs or [])
         self.budget = budget
         self.prefetch = bool(prefetch)
         self.n_strata = int(n_strata)
         self.seed = int(seed)
+        self.oracle_replicas = oracle_replicas
 
     def add(self, spec: QuerySpec) -> "QuerySession":
         self.specs.append(spec)
@@ -229,6 +235,8 @@ class QuerySession:
         """
         sp = self.plan()
         engine = self.engine
+        if self.oracle_replicas is not None:
+            engine.set_oracle_replicas(self.oracle_replicas)
         broker = engine.broker
         accounts: List[OracleAccount] = [
             broker.account(name=f"spec{i}:{p.kind}")

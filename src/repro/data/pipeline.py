@@ -15,7 +15,7 @@ import dataclasses
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 

@@ -14,10 +14,8 @@ numbers are reported alongside for validation on cells where scans are flat.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Dict, Tuple
 
 from repro.configs.base import LayerSpec, ModelConfig, ShapeConfig
 

@@ -17,7 +17,6 @@ import argparse
 import json
 import time
 
-import numpy as np
 
 from repro.core.pipeline import TastiConfig, build_tasti
 from repro.core.schema import make_workload

@@ -22,11 +22,8 @@ from __future__ import annotations
 
 import argparse
 import json
-import pathlib
-import sys
 
-import numpy as np
-
+from repro.core.codec import result_row as _result_row
 from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.index import TastiIndex
 from repro.core.pipeline import TastiConfig, build_tasti
@@ -34,7 +31,6 @@ from repro.core.queries.registry import registered_kinds
 from repro.core.schema import make_workload
 from repro.core.session import QuerySession
 from repro.core.triplet import TripletConfig
-from repro.core.codec import result_row as _result_row
 
 
 def _load_specs(args) -> list:
@@ -83,6 +79,10 @@ def main(argv=None) -> None:
     ap.add_argument("--oracle-batch", type=int, default=64,
                     help="max ids per target_dnn_batch microbatch issued by "
                          "the oracle broker")
+    ap.add_argument("--oracle-replicas", type=int, default=1,
+                    help="target-DNN replica workers behind the broker's "
+                         "microbatcher; results are identical at any count, "
+                         "flushes overlap across replicas")
     ap.add_argument("--save-index", default=None,
                     help="path stem to persist the (possibly cracked) index")
     ap.add_argument("--spec", action="append",
@@ -116,7 +116,8 @@ def main(argv=None) -> None:
         index = build_tasti(wl, cfg, variant=args.variant).index
 
     engine = QueryEngine(index, wl, crack=args.crack,
-                         max_oracle_batch=args.oracle_batch)
+                         max_oracle_batch=args.oracle_batch,
+                         oracle_replicas=args.oracle_replicas)
     session_stats = None
     rows = []
     if args.isolated:

@@ -25,11 +25,12 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import List, Optional
 
-from repro.configs import ASSIGNED_ARCHS, SHAPES, SHAPE_BY_NAME, cell_is_runnable, get_config
+from repro.configs import (ASSIGNED_ARCHS, SHAPE_BY_NAME, SHAPES,
+                           cell_is_runnable, get_config)
 from repro.launch import analytic
-from repro.launch.mesh import CHIPS_PER_POD, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-import threading
 
 from repro.core.engine import QueryEngine
 from repro.core.index import TastiIndex
@@ -57,6 +56,11 @@ def main(argv=None) -> None:
     ap.add_argument("--max-workers", type=int, default=4,
                     help="concurrently executing sessions")
     ap.add_argument("--oracle-batch", type=int, default=64)
+    ap.add_argument("--oracle-replicas", type=int, default=1,
+                    help="target-DNN replica workers behind the broker's "
+                         "microbatcher (one pool shared by all sessions); "
+                         "results are identical at any count, flushes "
+                         "overlap across replicas")
     ap.add_argument("--crack", action="store_true",
                     help="engine-level default for the cracking feedback loop")
     ap.add_argument("--store", default=None,
@@ -87,7 +91,8 @@ def main(argv=None) -> None:
         index = build_tasti(wl, cfg, variant=args.variant).index
 
     engine = QueryEngine(index, wl, crack=args.crack,
-                         max_oracle_batch=args.oracle_batch)
+                         max_oracle_batch=args.oracle_batch,
+                         oracle_replicas=args.oracle_replicas)
     store = None
     store_stem = args.store or args.index
     if store_stem:
@@ -103,6 +108,7 @@ def main(argv=None) -> None:
     print(json.dumps({"serving": server.url, "workload": wl.name,
                       "records": index.n_records, "reps": index.n_reps,
                       "index_version": index.version,
+                      "oracle_replicas": args.oracle_replicas,
                       "store_labels": None if store is None else len(store)}),
           flush=True)
     # park until a client POSTs /shutdown (or SIGINT); wait() only returns

@@ -17,11 +17,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import get_config
-from repro.data.pipeline import PipelineState, ShardedLoader, TokenDataset
+from repro.data.pipeline import TokenDataset
 from repro.models import lm
 from repro.optim.adamw import OptimizerConfig, init_opt_state
 from repro.runtime.fault_tolerance import StragglerMonitor, run_resilient

@@ -25,7 +25,7 @@ Design notes (see DESIGN.md §4/§5):
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

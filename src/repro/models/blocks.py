@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import attention, mamba, mlp, moe, xlstm
-from repro.models.common import ParamSpec, PyTree, rmsnorm, rmsnorm_specs
+from repro.models.common import PyTree, rmsnorm, rmsnorm_specs
 
 
 def layer_specs(cfg: ModelConfig, spec: LayerSpec, cross: bool = False) -> PyTree:

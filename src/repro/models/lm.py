@@ -12,7 +12,6 @@ SPMD partitioner (see DESIGN.md §4).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -21,9 +20,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import blocks, rope as rope_lib
-from repro.models.common import (ParamSpec, PyTree, abstract_params,
-                                 init_params, rmsnorm, rmsnorm_specs,
-                                 stack_specs, take_layer)
+from repro.models.common import (ParamSpec, PyTree, init_params, rmsnorm,
+                                 rmsnorm_specs, stack_specs)
 
 BATCH_AXES = ("pod", "data")
 

@@ -10,7 +10,6 @@ A) instead of emulating the GPU kernel.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ occupy positions [0, V) on a (gh, gw) grid, text follows.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,12 +8,12 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import PyTree, is_spec_leaf, spec_map
+from repro.models.common import PyTree, spec_map
 
 
 @dataclass(frozen=True)

@@ -14,7 +14,6 @@ The error ``e = g_local - dequant(q)`` is added to the next step's gradient.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

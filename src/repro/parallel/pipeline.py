@@ -16,8 +16,7 @@ training composes it with jax.grad as usual.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

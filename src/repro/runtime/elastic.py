@@ -9,7 +9,6 @@ data parallelism, and drop stragglers to a power-of-two device count.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Tuple
 
 import jax

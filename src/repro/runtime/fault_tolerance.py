@@ -18,7 +18,6 @@ the failure channel is injectable so the whole machinery is unit-testable:
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple

@@ -10,7 +10,10 @@ The system's first long-lived, multi-client layer.  Clients POST JSON
 * **runs sessions concurrently** — batches execute on a worker pool over one
   :class:`~repro.core.engine.QueryEngine` /
   :class:`~repro.core.broker.OracleBroker`, whose locks make concurrent
-  sessions produce results identical to isolated runs;
+  sessions produce results identical to isolated runs; with
+  ``--oracle-replicas N`` every session's flushes shard across the engine's
+  one :class:`~repro.core.oracle_pool.OraclePool` of target-DNN replicas
+  (stopped by :meth:`QueryServer.shutdown` after the last session drains);
 * **persists** — with a :class:`~repro.serve.store.LabelStore` attached to
   the broker, every flush is written through to disk, so a restarted server
   answers repeat queries with zero fresh target-DNN invocations.
@@ -143,6 +146,9 @@ class QueryServer:
             t.join(timeout=30.0)
         if self._pool is not None:
             self._pool.shutdown(wait=True)
+        # sessions are drained: stop the engine's target-DNN replica pool
+        # (no-op when sharding is off or the pool is externally owned)
+        self.engine.close()
         if self.store is not None:
             self.store.save()
         self._done.set()
@@ -286,6 +292,9 @@ class QueryServer:
                       "reps": engine.index.n_reps,
                       "version": engine.index.version},
         }
+        pool = engine.oracle_pool
+        if pool is not None:
+            payload["oracle_pool"] = pool.snapshot()
         if self.store is not None:
             payload["store"] = {"path": str(self.store.path),
                                 "n_labels": len(self.store),

@@ -7,8 +7,7 @@ ShapeDtypeStructs for the multi-pod dry-run and run identically on real data.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import lm
 from repro.models.common import PyTree
-from repro.optim.adamw import OptimizerConfig, adamw_update, init_opt_state
+from repro.optim.adamw import OptimizerConfig, adamw_update
 
 
 def make_train_step(cfg: ModelConfig, opt: OptimizerConfig,

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core import propagation
-from repro.core.engine import QueryEngine, QueryPlan, QuerySpec
+from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.index import TastiIndex
 from repro.core.queries.registry import registered_kinds
 from repro.core.schema import make_workload

@@ -1,17 +1,16 @@
 """Per-kernel parity: Pallas (interpret mode on CPU) vs pure-jnp refs, over
 fixed shape sweeps plus randomized shapes/dtypes.  The distance_topk and
 fpf_update parities are tier-1 gates — the semantic index is built on them."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.distance_topk.ops import distance_topk
 from repro.kernels.distance_topk.ref import distance_topk_ref
-from repro.kernels.fpf_update.ops import fpf_update
-from repro.kernels.fpf_update.ref import fpf_update_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.fpf_update.ops import fpf_update
+from repro.kernels.fpf_update.ref import fpf_update_ref
 
 
 def _random_case(seed):

@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import attention, lm, mamba, xlstm
 from repro.models.common import init_params
 

@@ -2,7 +2,6 @@
 one train step on CPU, asserting output shapes and finiteness (deliverable f)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config

@@ -12,7 +12,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
 

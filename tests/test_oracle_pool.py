@@ -1,0 +1,348 @@
+"""OraclePool + broker reservation-scheme tests: sharded flushes must be
+indistinguishable from the single-oracle path (labels, order, accounting),
+survive flaky replicas by retrying sub-batches on survivors, and keep
+in-flight dedup exact while labeling happens outside the broker lock."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.broker import OracleBroker
+from repro.core.oracle_pool import OraclePool, OraclePoolError
+
+pytestmark = pytest.mark.tier1
+
+
+class SpyOracle:
+    """annotate(ids) -> [2*i]; thread-safe record of every batch."""
+
+    def __init__(self, delay: float = 0.0):
+        self.batches = []
+        self.delay = delay
+        self._lock = threading.Lock()
+
+    def __call__(self, ids):
+        ids = np.asarray(ids, np.int64)
+        with self._lock:
+            self.batches.append(ids.tolist())
+        if self.delay:
+            time.sleep(self.delay)
+        return [int(i) * 2 for i in ids]
+
+    @property
+    def n_labeled(self):
+        with self._lock:
+            return sum(len(b) for b in self.batches)
+
+
+class FlakyOracle:
+    """Raises until ``heal()`` (or always, if never healed)."""
+
+    def __init__(self, name="flaky"):
+        self.name = name
+        self.calls = 0
+        self.ok = False
+
+    def heal(self):
+        self.ok = True
+
+    def __call__(self, ids):
+        self.calls += 1
+        if not self.ok:
+            raise RuntimeError(f"{self.name} replica is down")
+        return [int(i) * 2 for i in ids]
+
+
+# ---------------------------------------------------------------------------
+# pool basics
+# ---------------------------------------------------------------------------
+def test_pool_labels_everything_in_request_order():
+    spy = SpyOracle()
+    with OraclePool(spy, n_replicas=3) as pool:
+        broker = OracleBroker(spy, max_batch=16, pool=pool)
+        a = broker.account("a")
+        ids = np.arange(100)
+        fut = broker.request(ids, account=a)
+        assert broker.flush() == 100
+        assert fut.result() == [2 * i for i in ids]
+        # publish order == pending insertion order, replica count or not
+        assert a.labeled == list(range(100))
+        assert (a.fresh, a.cached) == (100, 0)
+        assert broker.stats["fresh"] == 100
+        assert spy.n_labeled == 100  # no id labeled twice
+        assert pool.snapshot()["batches"] == len(spy.batches)
+
+
+def test_size_aware_sharding_fans_small_flushes_out():
+    pool = OraclePool(SpyOracle(), n_replicas=4, oversub=2)
+    try:
+        # 40 ids, max_batch 64: a single-oracle flush would be ONE batch;
+        # the pool shards it so every replica has work (and stealing slack)
+        assert pool.chunk_size(40, 64) == 5
+        # large flushes stay microbatch-shaped
+        assert pool.chunk_size(10_000, 64) == 64
+    finally:
+        pool.close()
+
+
+def test_work_stealing_routes_around_a_slow_replica():
+    slow, fast = SpyOracle(delay=0.05), SpyOracle()
+    with OraclePool(replicas=[slow, fast], oversub=4) as pool:
+        labels, batches = pool.run(np.arange(64), max_batch=8)
+    assert labels == {i: 2 * i for i in range(64)}
+    assert batches == 8
+    # the fast replica stole most of the queue while the slow one slept
+    assert len(fast.batches) > len(slow.batches)
+
+
+def test_pool_rejects_bad_construction():
+    with pytest.raises(ValueError, match="n_replicas"):
+        OraclePool(SpyOracle(), n_replicas=0)
+    with pytest.raises(ValueError, match="annotate"):
+        OraclePool()
+    pool = OraclePool(SpyOracle(), n_replicas=1)
+    pool.close()
+    pool.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.run([1], max_batch=4)
+
+
+# ---------------------------------------------------------------------------
+# determinism: N replicas == single oracle, byte for byte
+# ---------------------------------------------------------------------------
+def _scripted_run(broker):
+    """A workload mixing request/prefetch/fetch, dup ids, and cache hits."""
+    a = broker.account("a")
+    b = broker.account("b")
+    broker.prefetch(np.arange(0, 40), account=a)
+    broker.request(np.arange(30, 60), account=b)
+    broker.flush()
+    out = []
+    out.append(broker.fetch(np.arange(0, 50), account=a))
+    out.append(broker.fetch([5, 5, 70, 71], account=b))
+    out.append(broker.request(np.arange(60, 80), account=b).result())
+    stats = {k: broker.stats[k] for k in
+             ("requests", "fresh", "cached", "dedup_inflight", "flushes",
+              "prefetched")}
+    accounts = [(x.name, x.fresh, x.cached, list(x.labeled)) for x in (a, b)]
+    return out, stats, accounts
+
+
+def test_sharded_path_identical_to_single_oracle():
+    single = _scripted_run(OracleBroker(SpyOracle(), max_batch=16))
+    for n in (2, 4):
+        spy = SpyOracle()
+        with OraclePool(spy, n_replicas=n) as pool:
+            sharded = _scripted_run(
+                OracleBroker(spy, max_batch=16, pool=pool))
+        assert sharded[0] == single[0], f"labels differ at {n} replicas"
+        assert sharded[1] == single[1], f"broker stats differ at {n} replicas"
+        assert sharded[2] == single[2], f"accounts differ at {n} replicas"
+
+
+def test_engine_results_identical_across_replica_counts():
+    from repro.core.engine import QueryEngine, QuerySpec
+    from repro.core.index import TastiIndex
+    from repro.core.schema import make_workload
+    from repro.core.session import QuerySession
+
+    wl = make_workload("night-street", n_frames=400)
+    index = TastiIndex.build(wl.features, 60, wl.target_dnn_batch, k=4,
+                             random_fraction=0.0, seed=0)
+    specs = [QuerySpec(kind="aggregation", score="score_count", err=0.2),
+             QuerySpec(kind="selection", score="score_has_object",
+                       budget=50),
+             QuerySpec(kind="limit", score="score_has_object", k_results=3)]
+
+    def run(replicas):
+        engine = QueryEngine(index, wl, oracle_replicas=replicas)
+        out = QuerySession(engine, list(specs)).execute()
+        rows = [(r.kind, r.estimate,
+                 None if r.selected is None else r.selected.tolist(),
+                 r.n_invocations, r.n_oracle_fresh, r.n_oracle_cached)
+                for r in out.results]
+        stats = {k: out.stats[k] for k in
+                 ("fresh_total", "cached_total", "prefetch_labels")}
+        engine.close()
+        return rows, stats
+
+    base = run(1)
+    assert run(3) == base
+
+
+# ---------------------------------------------------------------------------
+# fault injection: flaky replicas, full failure, rollback
+# ---------------------------------------------------------------------------
+def test_flaky_replica_retries_on_survivor_accounts_exact():
+    bad = FlakyOracle()
+    # slow survivors: the flaky replica definitely pulls (and fails) work
+    # while they are busy, so the retry path really runs
+    good = SpyOracle(delay=0.01)
+    with OraclePool(replicas=[bad, good, good]) as pool:
+        broker = OracleBroker(good, max_batch=8, pool=pool)
+        a = broker.account("a")
+        broker.request(np.arange(48), account=a)
+        assert broker.flush() == 48
+        assert (a.fresh, a.cached) == (48, 0)
+        assert a.labeled == list(range(48))
+        assert broker.fetch(np.arange(48), account=a) == \
+            [2 * i for i in range(48)]
+        assert (a.fresh, a.cached) == (48, 48)
+        snap = pool.snapshot()
+    assert bad.calls >= 1              # the flaky replica was really tried
+    assert snap["failures"] == bad.calls
+    assert snap["retries"] >= 1        # its sub-batches moved to survivors
+    assert snap["per_replica"][0] == 0
+    assert good.n_labeled == 48        # every id labeled exactly once
+
+
+def test_all_replicas_down_rolls_reservation_back_then_recovers():
+    bad = FlakyOracle()
+    with OraclePool(replicas=[bad, bad]) as pool:
+        broker = OracleBroker(bad, max_batch=8, pool=pool)
+        a = broker.account("a")
+        broker.request(np.arange(10), account=a)
+        with pytest.raises(OraclePoolError, match="failed on all"):
+            broker.flush()
+        # rollback: nothing published, nothing charged, ids pending again
+        assert broker.n_pending == 10
+        assert broker.snapshot()["n_inflight"] == 0
+        assert (a.fresh, a.cached) == (0, 0) and broker.stats["fresh"] == 0
+        bad.heal()
+        assert broker.flush() == 10
+        assert (a.fresh, a.cached) == (10, 0)
+        assert a.labeled == list(range(10))
+
+
+# ---------------------------------------------------------------------------
+# reservation scheme: dedup and blocking while labeling is lock-free
+# ---------------------------------------------------------------------------
+class GatedOracle:
+    """Blocks inside annotate() until released; signals entry."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.gate = threading.Event()
+        self.batches = []
+
+    def __call__(self, ids):
+        self.entered.set()
+        assert self.gate.wait(10), "test gate never released"
+        self.batches.append([int(i) for i in ids])
+        return [int(i) * 2 for i in ids]
+
+
+def test_request_dedups_against_inflight_reservation():
+    gated = GatedOracle()
+    broker = OracleBroker(gated, max_batch=64)
+    a = broker.account("a")
+    b = broker.account("b")
+    broker.request([1, 2, 3], account=a)
+    flusher = threading.Thread(target=broker.flush)
+    flusher.start()
+    assert gated.entered.wait(10)
+    # the flush is mid-labeling and the broker lock is FREE: a concurrent
+    # request rides the in-flight reservation instead of re-enqueueing
+    fut = broker.request([2, 3, 4], account=b)
+    assert broker.stats["dedup_inflight"] == 2
+    assert broker.n_pending == 1          # only id 4 is newly pending
+    gated.gate.set()
+    flusher.join(timeout=10)
+    assert fut.result() == [4, 6, 8]      # drains id 4, waits for 2 and 3
+    assert (a.fresh, a.cached) == (3, 0)
+    assert (b.fresh, b.cached) == (1, 2)
+    assert sum(len(x) for x in gated.batches) == 4  # 2,3 labeled once
+
+
+def test_blocking_read_waits_for_another_threads_publish():
+    gated = GatedOracle()
+    broker = OracleBroker(gated, max_batch=64)
+    fut = broker.request([7, 8])
+    flusher = threading.Thread(target=broker.flush)
+    flusher.start()
+    assert gated.entered.wait(10)
+    # everything this future needs is reserved by the flusher: result()
+    # must wait for the publish, not re-label
+    threading.Timer(0.2, gated.gate.set).start()
+    assert fut.result() == [14, 16]
+    flusher.join(timeout=10)
+    assert broker.stats["fresh"] == 2 and broker.stats["batches"] == 1
+
+
+def test_close_drains_inflight_run_instead_of_stranding_it():
+    gated = GatedOracle()
+    pool = OraclePool(gated, n_replicas=2)
+    broker = OracleBroker(gated, max_batch=4, pool=pool)
+    broker.request(np.arange(8))
+    out = {}
+
+    def run_flush():
+        out["n"] = broker.flush()
+
+    flusher = threading.Thread(target=run_flush)
+    flusher.start()
+    assert gated.entered.wait(10)
+    closer = threading.Thread(target=pool.close)   # close mid-flush
+    closer.start()
+    gated.gate.set()
+    flusher.join(timeout=10)
+    closer.join(timeout=10)
+    assert not flusher.is_alive() and not closer.is_alive()
+    assert out["n"] == 8                  # the in-flight flush completed
+    assert broker.fetch(np.arange(8)) == [2 * i for i in range(8)]
+
+    # a NEW flush against the closed pool falls back to inline labeling
+    gated.gate.set()
+    broker.request([100, 101])
+    assert broker.flush() == 2
+    assert broker.cache[100] == 200
+
+
+def test_engine_resize_replicas_between_sessions():
+    from repro.core.engine import QueryEngine
+    from repro.core.index import TastiIndex
+    from repro.core.schema import make_workload
+    wl = make_workload("night-street", n_frames=200)
+    index = TastiIndex.build(wl.features, 30, wl.target_dnn_batch, k=2,
+                             random_fraction=0.0, seed=0)
+    engine = QueryEngine(index, wl, oracle_replicas=2)
+    assert engine.broker.pool is engine.oracle_pool is not None
+    first = engine.broker.fetch(np.arange(20))
+    engine.set_oracle_replicas(4)          # old pool closed, new one attached
+    assert engine.oracle_pool.n_replicas == 4
+    assert engine.broker.pool is engine.oracle_pool
+    assert engine.broker.fetch(np.arange(20)) == first  # cache intact
+    engine.set_oracle_replicas(1)          # back to inline
+    assert engine.oracle_pool is None and engine.broker.pool is None
+    engine.close()
+
+
+def test_injected_broker_gets_the_replica_pool():
+    from repro.core.engine import QueryEngine
+    from repro.core.index import TastiIndex
+    from repro.core.schema import make_workload
+    wl = make_workload("night-street", n_frames=200)
+    index = TastiIndex.build(wl.features, 30, wl.target_dnn_batch, k=2,
+                             random_fraction=0.0, seed=0)
+    shared = OracleBroker(wl.target_dnn_batch, max_batch=16)
+    engine = QueryEngine(index, wl, broker=shared, oracle_replicas=3)
+    # the sharding knob must not be silently ignored on a shared broker
+    assert shared.pool is engine.oracle_pool
+    assert engine.oracle_pool.n_replicas == 3
+    engine.close()
+    assert shared.pool is None
+
+
+def test_write_through_sees_one_ordered_stream_per_flush():
+    spy = SpyOracle()
+    with OraclePool(spy, n_replicas=4) as pool:
+        broker = OracleBroker(spy, max_batch=8, pool=pool)
+        flushes = []
+        broker.on_fresh(lambda labeled: flushes.append(list(labeled)))
+        broker.request(np.arange(64))
+        broker.flush()
+        broker.request(np.arange(64, 80))
+        broker.flush()
+    # one callback per flush, ids in pending order despite sharded labeling
+    assert flushes == [list(range(64)), list(range(64, 80))]

@@ -1,7 +1,6 @@
 """Query-processing algorithm tests: EB aggregation coverage, SUPG recall
 guarantees, limit-query behavior."""
 import numpy as np
-import pytest
 
 from repro.core.queries.aggregation import (aggregate_control_variates,
                                             eb_half_width)

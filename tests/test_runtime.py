@@ -1,6 +1,5 @@
 """Checkpoint/restart, fault tolerance, stragglers, elastic meshes, optimizer,
 gradient compression, data pipeline."""
-import time
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +11,8 @@ from repro.data.pipeline import PipelineState, ShardedLoader, TokenDataset
 from repro.optim.adamw import OptimizerConfig, adamw_update, init_opt_state, schedule
 from repro.optim.compression import compress_decompress, quantize
 from repro.runtime.elastic import choose_mesh_shape
-from repro.runtime.fault_tolerance import (PreemptionSignal, RunReport,
-                                           StragglerMonitor, run_resilient)
+from repro.runtime.fault_tolerance import (PreemptionSignal, StragglerMonitor,
+                                           run_resilient)
 
 
 # ----------------------------- checkpoint ---------------------------------
@@ -136,7 +135,9 @@ def test_adamw_decreases_quadratic():
                           total_steps=100, weight_decay=0.0)
     params = {"w": jnp.asarray([3.0, -2.0])}
     state = init_opt_state(params, opt)
-    loss = lambda p: jnp.sum(p["w"] ** 2)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
     l0 = float(loss(params))
     for _ in range(50):
         g = jax.grad(loss)(params)

@@ -2,7 +2,6 @@
 invalidation, write-through), concurrent-session parity over one thread-safe
 broker, and the HTTP QueryServer end to end (admission-window coalescing,
 /stats accounting, warm repeat requests costing zero fresh labels)."""
-import json
 import threading
 
 import numpy as np
@@ -231,6 +230,46 @@ def test_threaded_sessions_match_isolated_runs(wl, index):
     assert conc_fresh <= iso_fresh
     # every label the broker issued was fresh exactly once
     assert shared.broker.stats["fresh"] == len(shared.broker.cache)
+
+
+def test_sharded_server_warm_restart_still_free(wl, index, tmp_path):
+    """One replica pool shared by all of a server's sessions must not break
+    the store's warm-restart guarantee: a restarted sharded server answers
+    the repeat spec list with zero fresh labels and identical rows."""
+    stem = str(tmp_path / "sharded")
+
+    def start():
+        eng = QueryEngine(index, wl, oracle_replicas=2)
+        store = LabelStore.for_index(stem, index)
+        store.attach(eng.broker, eng)
+        return QueryServer(eng, port=0, admission_window=0.0,
+                           store=store).start()
+
+    specs = [s.to_dict() for s in SPECS]
+    srv = start()
+    try:
+        client = QueryClient(srv.url)
+        client.wait_ready(10)
+        out1 = client.query(specs)
+        assert out1["request"]["fresh"] > 0
+        stats = client.stats()
+        assert stats["oracle_pool"]["n_replicas"] == 2
+        assert stats["oracle_pool"]["batches"] >= 1
+    finally:
+        srv.shutdown()
+
+    srv = start()  # warm restart, still sharded
+    try:
+        c2 = QueryClient(srv.url)
+        c2.wait_ready(10)
+        out2 = c2.query(specs)
+        assert out2["request"]["fresh"] == 0
+        for a, b in zip(out1["results"], out2["results"]):
+            assert a.get("estimate") == b.get("estimate")
+            assert a.get("selected_head") == b.get("selected_head")
+            assert a["n_invocations"] == b["n_invocations"]
+    finally:
+        srv.shutdown()
 
 
 # -- HTTP server ------------------------------------------------------------

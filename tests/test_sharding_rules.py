@@ -1,12 +1,10 @@
 """Sharding-rule invariants (run on 1 device; full-mesh coherence is proven by
 the 512-device dry-run, experiments/dryrun/)."""
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, get_config
-from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.models.common import is_spec_leaf
 from repro.parallel import sharding as shd
@@ -32,6 +30,7 @@ def test_param_pspecs_no_duplicates_and_divisible(arch, mesh):
     flat_s = jax.tree.leaves(specs, is_leaf=is_spec_leaf)
     flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
     assert len(flat_s) == len(flat_p)
+
     def size_of(axis):
         if isinstance(axis, tuple):
             n = 1
