@@ -1,0 +1,161 @@
+"""Regression gate: compare benchmark JSON outputs against a committed
+baseline and fail on >tolerance regressions.
+
+The CI ``bench-gate`` job runs ``benchmarks/oracle_scaling.py --json`` and
+``benchmarks/serve_throughput.py --json``, then checks every metric listed
+in ``benchmarks/BENCH_baseline.json``:
+
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        --baseline benchmarks/BENCH_baseline.json \\
+        --current oracle_scaling=reports/oracle_scaling.json \\
+        --current serve_throughput=reports/serve_throughput.json
+
+Baseline format — metric keys are ``<alias>:<dotted.path>`` into the
+flattened current JSON; ``direction`` says which way is good; an absent
+per-metric ``tolerance`` uses ``default_tolerance`` (0.25 = fail on >25%
+regression)::
+
+    {"default_tolerance": 0.25,
+     "metrics": {
+       "oracle_scaling:speedup_at_4": {"value": 3.5, "direction": "higher"},
+       "serve_throughput:metrics.serve/warm_serial.fresh_per_query":
+           {"value": 0.0, "direction": "lower"}}}
+
+Baseline *values* are calibrated floors/ceilings, not exact expectations:
+ratio and label-count metrics transfer across machines; wall-clock metrics
+get conservative values (or wider per-metric tolerances) so the gate
+catches collapses, not runner jitter.
+
+``--scale key=factor`` multiplies an observed metric before checking — the
+CI self-test injects a synthetic 2x slowdown this way and asserts the gate
+goes red.  ``--write-baseline`` refreshes the committed values from the
+current run (directions/tolerances kept).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+
+def flatten(obj, prefix: str = "") -> Dict[str, float]:
+    """Numeric leaves of nested dicts as ``a.b.c`` keys (bools/strings/
+    lists are not gate-able and are skipped)."""
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def check(baseline: dict, currents: Dict[str, Dict[str, float]],
+          scales: Dict[str, float]) -> List[str]:
+    """Returns failure messages (empty = gate green); prints one verdict
+    line per metric."""
+    default_tol = float(baseline.get("default_tolerance", 0.25))
+    failures: List[str] = []
+    for key, m in baseline["metrics"].items():
+        alias, _, path = key.partition(":")
+        direction = m["direction"]
+        if direction not in ("higher", "lower"):
+            raise ValueError(f"{key}: direction must be higher|lower")
+        if alias not in currents:
+            failures.append(f"{key}: no --current file for alias {alias!r}")
+            continue
+        cur = currents[alias].get(path)
+        if cur is None:
+            failures.append(f"{key}: metric missing from current run")
+            continue
+        cur *= scales.get(key, 1.0)
+        tol = float(m.get("tolerance", default_tol))
+        base = float(m["value"])
+        if direction == "higher":
+            limit = base * (1.0 - tol)
+            ok = cur >= limit
+            verdict = f"{cur:.4g} >= {limit:.4g}"
+        else:
+            limit = base * (1.0 + tol)
+            ok = cur <= limit
+            verdict = f"{cur:.4g} <= {limit:.4g}"
+        status = "ok  " if ok else "FAIL"
+        print(f"[{status}] {key}: {verdict} "
+              f"(baseline {base:.4g}, {direction} is better, "
+              f"tolerance {tol:.0%})")
+        if not ok:
+            failures.append(
+                f"{key}: {cur:.4g} regressed past {limit:.4g} "
+                f"(baseline {base:.4g} +/- {tol:.0%})")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="fail on >tolerance benchmark regressions vs a "
+                    "committed baseline")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON (BENCH_baseline.json)")
+    ap.add_argument("--current", action="append", required=True,
+                    metavar="ALIAS=PATH",
+                    help="benchmark --json output to check, keyed by the "
+                         "alias baseline metrics use (repeatable)")
+    ap.add_argument("--scale", action="append", default=[],
+                    metavar="METRIC=FACTOR",
+                    help="multiply an observed metric before checking "
+                         "(synthetic-regression injection for gate "
+                         "self-tests; repeatable)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the baseline's values from the current "
+                         "run instead of checking (directions/tolerances "
+                         "kept)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    currents: Dict[str, Dict[str, float]] = {}
+    for spec in args.current:
+        alias, _, path = spec.partition("=")
+        if not path:
+            ap.error(f"--current wants ALIAS=PATH, got {spec!r}")
+        with open(path) as f:
+            currents[alias] = flatten(json.load(f))
+    scales: Dict[str, float] = {}
+    for spec in args.scale:
+        key, _, factor = spec.rpartition("=")
+        if not key:
+            ap.error(f"--scale wants METRIC=FACTOR, got {spec!r}")
+        if key not in baseline["metrics"]:
+            # a silently ignored scale key would let the CI self-test claim
+            # the gate catches regressions it never actually injected
+            ap.error(f"--scale key {key!r} is not a baseline metric; "
+                     f"known: {sorted(baseline['metrics'])}")
+        scales[key] = float(factor)
+
+    if args.write_baseline:
+        for key, m in baseline["metrics"].items():
+            alias, _, path = key.partition(":")
+            cur = currents.get(alias, {}).get(path)
+            if cur is None:
+                sys.exit(f"cannot refresh {key}: metric missing from "
+                         "current run")
+            m["value"] = round(cur, 4)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"baseline {args.baseline} refreshed from current run")
+        return
+
+    failures = check(baseline, currents, scales)
+    if failures:
+        print(f"\nbench-gate: {len(failures)} regression(s):",
+              file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        sys.exit(1)
+    print("\nbench-gate: all metrics within tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,11 +15,13 @@ import numpy as np
 from repro.core.baselines import ProxyConfig, train_query_proxy
 from repro.core.engine import QueryEngine
 from repro.core.pipeline import TastiConfig, TastiSystem, build_tasti
-from repro.core.schema import make_workload
+from repro.core.schema import VIDEO_WORKLOAD_NAMES, WORKLOAD_NAMES, make_workload
 from repro.core.triplet import TripletConfig
 
-VIDEO_SETS = ("night-street", "taipei", "amsterdam")
-ALL_SETS = VIDEO_SETS + ("wikisql",)
+# dataset names are canonical in repro.core.schema (the serving registry
+# and CLIs validate against the same tuples)
+VIDEO_SETS = VIDEO_WORKLOAD_NAMES
+ALL_SETS = WORKLOAD_NAMES
 
 # scaled-down standard setup (paper: 3000 train / 7000 reps over ~1M frames)
 N_FRAMES = 8000
@@ -35,8 +37,7 @@ def get_workload(name: str, quick: bool = False):
     n = 3000 if quick else N_FRAMES
     key = ("wl", name, n)
     if key not in _CACHE:
-        kw = {"n_frames": n} if name != "wikisql" else {"n_records": n}
-        _CACHE[key] = make_workload(name, **kw)
+        _CACHE[key] = make_workload(name, n_records=n)
     return _CACHE[key]
 
 

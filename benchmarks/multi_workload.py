@@ -1,0 +1,196 @@
+"""Multi-workload serving: one 2-workload server vs 2 single-workload servers.
+
+A production deployment amortizes one endpoint across many workloads, but
+only if routing is *free* of cross-workload interference: the fresh-label
+accounting a workload sees on a shared server must be exactly what it would
+see on a server of its own.  This benchmark drives a video (night-street)
+and a text (wikisql) workload
+
+* **isolated** — two single-workload :class:`~repro.serve.server.QueryServer`
+  processes-worth of stacks, each workload's request train posted serially
+  to its own server;
+* **multi** — ONE server mounting both workloads via a
+  :class:`~repro.serve.registry.WorkloadRegistry`, the same two request
+  trains posted concurrently (each train still serial within its workload,
+  so per-workload accounting is deterministic), interleaving on the shared
+  worker pool.
+
+Asserted, not just reported: per-workload fresh-label totals and every
+result row are **identical** between the two deployments (no cross-workload
+interference in fresh-label accounting), with queries/s for both reported.
+
+    PYTHONPATH=src python -m benchmarks.multi_workload --quick --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.engine import QueryEngine
+from repro.core.index import TastiIndex
+from repro.core.schema import make_workload
+from repro.serve import QueryClient, QueryServer, WorkloadRegistry
+
+
+def _video_lists(quick: bool) -> List[List[dict]]:
+    lists = []
+    for seed in range(2 if quick else 4):
+        lists.append([
+            {"kind": "aggregation", "score": "score_count",
+             "err": 0.15, "seed": seed},
+            {"kind": "selection", "score": "score_has_object",
+             "budget": 80 + 20 * seed, "seed": seed},
+            {"kind": "limit", "score": "score_has_object",
+             "k_results": 3 + seed % 2},
+        ])
+    return lists
+
+
+def _text_lists(quick: bool) -> List[List[dict]]:
+    lists = []
+    for seed in range(2 if quick else 4):
+        lists.append([
+            {"kind": "aggregation", "score": "score_n_predicates",
+             "err": 0.15, "seed": seed},
+            {"kind": "selection", "score": "score_is_select",
+             "budget": 70 + 15 * seed, "seed": seed},
+        ])
+    return lists
+
+
+def _strip(row: dict) -> dict:
+    """Comparable form of a result row: routing stamp and trace removed
+    (the multi server stamps rows with its mount name)."""
+    return {k: v for k, v in row.items() if k not in ("workload", "plan")}
+
+
+def _drive_serial(url: str, spec_lists: List[List[dict]],
+                  workload: Optional[str] = None
+                  ) -> Tuple[List[List[dict]], int]:
+    """Post every spec list in order; returns (rows per request, fresh)."""
+    client = QueryClient(url)
+    client.wait_ready(30)
+    rows, fresh = [], 0
+    for specs in spec_lists:
+        out = client.query(specs, workload=workload)
+        rows.append([_strip(r) for r in out["results"]])
+        fresh += out["request"]["fresh"]
+    return rows, fresh
+
+
+def _build(dataset: str, n: int, n_reps: int):
+    wl = make_workload(dataset, n_records=n)
+    index = TastiIndex.build(wl.features, n_reps, wl.target_dnn_batch, k=4,
+                             random_fraction=0.0, seed=0)
+    return wl, index
+
+
+def bench(quick: bool = False) -> Dict[str, object]:
+    n = 800 if quick else 2000
+    wl_v, idx_v = _build("night-street", n, 100 if quick else 200)
+    wl_t, idx_t = _build("wikisql", n, 100 if quick else 200)
+    trains = {"video": _video_lists(quick), "text": _text_lists(quick)}
+    n_queries = sum(len(s) for t in trains.values() for s in t)
+
+    # isolated: each workload on a server of its own.  Only the query
+    # drives are timed — server start/ready/shutdown happen outside the
+    # window in both deployments, so the queries/s comparison is honest
+    iso_rows: Dict[str, List[List[dict]]] = {}
+    iso_fresh: Dict[str, int] = {}
+    iso_s = 0.0
+    for name, (wl, idx) in (("video", (wl_v, idx_v)), ("text", (wl_t, idx_t))):
+        server = QueryServer(QueryEngine(idx, wl), port=0,
+                             admission_window=0.0).start()
+        try:
+            QueryClient(server.url).wait_ready(30)
+            t0 = time.perf_counter()
+            iso_rows[name], iso_fresh[name] = _drive_serial(server.url,
+                                                            trains[name])
+            iso_s += time.perf_counter() - t0
+        finally:
+            server.shutdown()
+
+    # multi: ONE server, both workloads, trains posted concurrently
+    registry = WorkloadRegistry()
+    registry.register("video", QueryEngine(idx_v, wl_v))
+    registry.register("text", QueryEngine(idx_t, wl_t))
+    server = QueryServer(registry, port=0, admission_window=0.0).start()
+    QueryClient(server.url).wait_ready(30)
+    multi_rows: Dict[str, List[List[dict]]] = {}
+    multi_fresh: Dict[str, int] = {}
+    errors: List[BaseException] = []
+
+    def drive(name: str) -> None:
+        try:
+            multi_rows[name], multi_fresh[name] = _drive_serial(
+                server.url, trains[name], workload=name)
+        except BaseException as e:  # noqa: BLE001 - re-raised below
+            errors.append(e)
+
+    try:
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=drive, args=(name,))
+                   for name in trains]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        multi_s = time.perf_counter() - t0
+        if errors:
+            raise errors[0]
+        stats = QueryClient(server.url).stats()
+        acct = {name: stats["workloads"][name]["accounts"]["fresh_total"]
+                for name in trains}
+    finally:
+        server.shutdown()
+
+    for name in trains:
+        if multi_fresh[name] != iso_fresh[name] or acct[name] != iso_fresh[name]:
+            raise AssertionError(
+                f"cross-workload interference: {name} paid "
+                f"{multi_fresh[name]} fresh labels (accounts: {acct[name]}) "
+                f"on the shared server vs {iso_fresh[name]} isolated")
+        if multi_rows[name] != iso_rows[name]:
+            raise AssertionError(
+                f"workload {name} answers differ between the shared and "
+                "isolated servers")
+    return {
+        "n_queries": n_queries,
+        "isolated_queries_per_s": n_queries / max(iso_s, 1e-9),
+        "multi_queries_per_s": n_queries / max(multi_s, 1e-9),
+        "fresh_per_workload": dict(iso_fresh),
+        "interference_free": True,
+    }
+
+
+def run(quick: bool = False) -> List[tuple]:
+    """Benchmark-harness entry point: CSV rows."""
+    out = bench(quick)
+    rows = [("multi_workload/shared", "queries_per_s",
+             round(out["multi_queries_per_s"], 2)),
+            ("multi_workload/isolated", "queries_per_s",
+             round(out["isolated_queries_per_s"], 2))]
+    for name, fresh in out["fresh_per_workload"].items():
+        rows.append((f"multi_workload/{name}", "fresh_labels", fresh))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="2-workload server vs 2 single-workload servers")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="also write the measurements as JSON (CI artifact)")
+    args = ap.parse_args(argv)
+    payload = {"quick": args.quick, **bench(args.quick)}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,13 +12,20 @@ HTTP, admission window, worker pool), one shared TASTI index:
   broker) over the store the cold phases persisted, answering the same spec
   lists.  The paper's cost metric for a repeat query must be **zero** fresh
   target-DNN invocations — asserted, not just reported.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput --quick --json out.json
+
+(the ``--json`` form feeds the CI ``bench-gate`` job's regression check,
+``benchmarks/check_regression.py``)
 """
 from __future__ import annotations
 
+import argparse
+import json
 import tempfile
 import threading
 import time
-from typing import List
+from typing import List, Optional
 
 from benchmarks import common
 from repro.core.engine import QueryEngine
@@ -114,3 +121,26 @@ def run(quick: bool = False):
                     "invocations on a repeated spec list; the persistent "
                     "label store must answer repeats for free")
     return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="serving throughput: queries/s and fresh-per-query, "
+                    "serial/concurrent x cold/warm")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="also write the measurements as JSON (the CI "
+                         "bench-gate artifact)")
+    args = ap.parse_args(argv)
+    rows = run(args.quick)
+    payload = {"quick": args.quick,
+               "metrics": {f"{name}.{metric}": value
+                           for name, metric, value in rows}}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+
+
+if __name__ == "__main__":
+    main()

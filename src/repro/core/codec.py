@@ -7,11 +7,15 @@ core, never on each other.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 
-def result_row(res) -> Dict[str, Any]:
-    """Flatten a ``QueryResult`` into JSON-safe primitives."""
+def result_row(res, workload: Optional[str] = None) -> Dict[str, Any]:
+    """Flatten a ``QueryResult`` into JSON-safe primitives.  ``workload`` is
+    the mounted workload that actually executed the query (multi-workload
+    servers stamp it so interleaved clients can tell rows apart).  There is
+    deliberately no fallback to the spec's own routing field: a caller that
+    does not route (the ``launch.query`` CLI) must not report one."""
     row = {
         "kind": res.kind,
         "n_invocations": res.n_invocations,
@@ -21,6 +25,8 @@ def result_row(res) -> Dict[str, Any]:
         "query_cost_s": round(sum(res.cost.values()), 3),
         "plan": res.plan.trace,
     }
+    if workload is not None:
+        row["workload"] = workload
     if res.estimate is not None:
         row["estimate"] = round(res.estimate, 6)
     if res.ci_half_width is not None:

@@ -81,10 +81,15 @@ class QuerySpec:
     reuse_labels: bool = True                   # read the shared label cache
     crack: Optional[bool] = None                # None -> engine default
 
+    # routing: which mounted workload a multi-workload server executes this
+    # spec against (None -> the server's default; the engine itself ignores
+    # it — score names already resolve against the engine's own workload)
+    workload: Optional[str] = None
+
     _JSON_FIELDS = ("kind", "score", "propagation", "n_classes", "err",
                     "delta", "recall_target", "budget", "k_results", "batch",
                     "min_samples", "max_samples", "max_invocations", "use_cv",
-                    "seed", "score_key", "reuse_labels", "crack")
+                    "seed", "score_key", "reuse_labels", "crack", "workload")
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "QuerySpec":

@@ -101,6 +101,20 @@ class TastiSystem:
         self.engine.crack_with(np.asarray(ids, np.int64))
 
 
+def cli_tasti_config(quick: bool = False, n_train: int = 400,
+                     n_reps: int = 800, k: int = 8,
+                     triplet_steps: int = 400) -> TastiConfig:
+    """The build budgets shared by the query/serving CLIs and the workload
+    registry: one ``--quick`` smoke configuration (tiny budgets for CI),
+    else the given knobs at their common CLI defaults."""
+    if quick:
+        return TastiConfig(n_train=100, n_reps=200, k=4,
+                           triplet=TripletConfig(steps=60, batch=128),
+                           pretrain_steps=40)
+    return TastiConfig(n_train=n_train, n_reps=n_reps, k=k,
+                       triplet=TripletConfig(steps=triplet_steps))
+
+
 def build_tasti(workload, cfg: Optional[TastiConfig] = None,
                 variant: str = "T",
                 use_fpf_mining: bool = True,

@@ -228,13 +228,29 @@ class TextWorkload:
         return 1.0 if rec.op == 0 else 0.0
 
 
+#: Datasets make_workload knows how to synthesize (CLIs and the serving
+#: registry validate workload mounts against this list).
+VIDEO_WORKLOAD_NAMES = ("night-street", "taipei", "amsterdam")
+WORKLOAD_NAMES = VIDEO_WORKLOAD_NAMES + ("wikisql",)
+
+
 def make_workload(name: str, **kw):
-    if name in ("night-street", "taipei", "amsterdam"):
+    """Synthesize the named workload.  The size kw is dataset-specific
+    (``n_frames`` for video, ``n_records`` for text) but either spelling is
+    accepted and translated, so generic callers (CLIs, the serving
+    registry) can size every dataset uniformly."""
+    if "n_frames" in kw and "n_records" in kw:
+        raise ValueError("pass n_frames or n_records, not both")
+    if name in VIDEO_WORKLOAD_NAMES:
+        if "n_records" in kw:
+            kw["n_frames"] = kw.pop("n_records")
         seeds = {"night-street": 0, "taipei": 7, "amsterdam": 13}
         # taipei has two object classes in the paper; we model heavier traffic
         overrides = {"taipei": dict(p_stay=0.96), "amsterdam": dict(p_stay=0.99)}
         return VideoWorkload(seed=seeds[name], name=name + "-synth",
                              **{**overrides.get(name, {}), **kw})
     if name == "wikisql":
+        if "n_frames" in kw:
+            kw["n_records"] = kw.pop("n_frames")
         return TextWorkload(**kw)
     raise KeyError(name)

@@ -19,14 +19,14 @@ import time
 
 
 from repro.core.pipeline import TastiConfig, build_tasti
-from repro.core.schema import make_workload
+from repro.core.schema import WORKLOAD_NAMES, make_workload
 from repro.core.triplet import TripletConfig
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="night-street",
-                    choices=["night-street", "taipei", "amsterdam", "wikisql"])
+                    choices=list(WORKLOAD_NAMES))
     ap.add_argument("--n-frames", type=int, default=8000)
     ap.add_argument("--variant", default="T", choices=["T", "PT"])
     ap.add_argument("--n-train", type=int, default=400)
@@ -39,9 +39,7 @@ def main() -> None:
     ap.add_argument("--out", required=True)
     args = ap.parse_args()
 
-    kw = ({"n_frames": args.n_frames} if args.workload != "wikisql"
-          else {"n_records": args.n_frames})
-    wl = make_workload(args.workload, **kw)
+    wl = make_workload(args.workload, n_records=args.n_frames)
     cfg = TastiConfig(n_train=args.n_train, n_reps=args.n_reps, k=args.k,
                       embed_dim=args.embed_dim,
                       triplet=TripletConfig(steps=args.triplet_steps))

@@ -26,11 +26,10 @@ import json
 from repro.core.codec import result_row as _result_row
 from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.index import TastiIndex
-from repro.core.pipeline import TastiConfig, build_tasti
+from repro.core.pipeline import build_tasti, cli_tasti_config
 from repro.core.queries.registry import registered_kinds
-from repro.core.schema import make_workload
+from repro.core.schema import WORKLOAD_NAMES, make_workload
 from repro.core.session import QuerySession
-from repro.core.triplet import TripletConfig
 
 
 def _load_specs(args) -> list:
@@ -55,7 +54,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="execute declarative QuerySpecs against a TASTI index")
     ap.add_argument("--workload", default="night-street",
-                    choices=["night-street", "taipei", "amsterdam", "wikisql"])
+                    choices=list(WORKLOAD_NAMES))
     ap.add_argument("--n-frames", type=int, default=8000,
                     help="records in the (synthetic) workload")
     ap.add_argument("--index", default=None,
@@ -94,9 +93,7 @@ def main(argv=None) -> None:
         ap.error("--session-budget needs session planning; drop --isolated")
 
     specs = _load_specs(args)
-    kw = ({"n_frames": args.n_frames} if args.workload != "wikisql"
-          else {"n_records": args.n_frames})
-    wl = make_workload(args.workload, **kw)
+    wl = make_workload(args.workload, n_records=args.n_frames)
 
     if args.index:
         index = TastiIndex.load(args.index)
@@ -105,14 +102,9 @@ def main(argv=None) -> None:
                 f"index covers {index.n_records} records but workload "
                 f"{wl.name} has {len(wl.features)}; pass matching --n-frames")
     else:
-        if args.quick:
-            cfg = TastiConfig(n_train=100, n_reps=200, k=4,
-                              triplet=TripletConfig(steps=60, batch=128),
-                              pretrain_steps=40)
-        else:
-            cfg = TastiConfig(n_train=args.n_train, n_reps=args.n_reps,
-                              k=args.k,
-                              triplet=TripletConfig(steps=args.triplet_steps))
+        cfg = cli_tasti_config(args.quick, n_train=args.n_train,
+                               n_reps=args.n_reps, k=args.k,
+                               triplet_steps=args.triplet_steps)
         index = build_tasti(wl, cfg, variant=args.variant).index
 
     engine = QueryEngine(index, wl, crack=args.crack,

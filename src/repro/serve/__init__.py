@@ -3,19 +3,27 @@
 * :mod:`repro.serve.store` — :class:`LabelStore`, the persistent oracle-label
   cache that lives next to a saved :class:`~repro.core.index.TastiIndex` and
   survives process restarts;
+* :mod:`repro.serve.registry` — :class:`WorkloadRegistry` /
+  :class:`WorkloadSpec`, the mounting table that puts many workloads (each
+  its own index + engine + store + oracle pool) behind one server, loaded
+  lazily from a manifest;
 * :mod:`repro.serve.server` — :class:`QueryServer`, a stdlib
-  ``ThreadingHTTPServer`` whose admission window coalesces concurrent
-  requests into shared :class:`~repro.core.session.QuerySession` s;
+  ``ThreadingHTTPServer`` that routes specs to workloads and coalesces
+  concurrent requests per workload into shared
+  :class:`~repro.core.session.QuerySession` s;
 * :mod:`repro.serve.client` — :class:`QueryClient` plus a small CLI.
 
 (The JSON wire form of a ``QueryResult`` is :mod:`repro.core.codec` — shared
 with the ``repro.launch.query`` CLI.)
 """
-__all__ = ["LabelStore", "QueryClient", "QueryServer"]
+__all__ = ["LabelStore", "QueryClient", "QueryServer", "WorkloadRegistry",
+           "WorkloadSpec"]
 
 _HOMES = {"LabelStore": "repro.serve.store",
           "QueryClient": "repro.serve.client",
-          "QueryServer": "repro.serve.server"}
+          "QueryServer": "repro.serve.server",
+          "WorkloadRegistry": "repro.serve.registry",
+          "WorkloadSpec": "repro.serve.registry"}
 
 
 def __getattr__(name):

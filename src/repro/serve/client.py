@@ -7,12 +7,17 @@ Library use:
     out = c.query([{"kind": "aggregation", "score": "score_count"}])
     out["results"][0]["estimate"], out["request"]["fresh"]
 
+Connection-refused errors are retried with backoff for ``connect_wait``
+seconds (default 10) — a client launched alongside the server does not need
+a sleep to win the startup race.
+
 CLI (mirrors ``repro.launch.query``'s spec flags; exits non-zero if
-``--expect-fresh`` is violated, which the CI smoke uses to assert that a
-warm-store repeat request costs zero target-DNN invocations):
+``--expect-fresh`` or ``--expect-workloads`` is violated, which the CI smoke
+uses to assert that a warm-store repeat request costs zero target-DNN
+invocations and that a multi-workload server mounted everything):
 
     PYTHONPATH=src python -m repro.serve.client --url http://127.0.0.1:8123 \\
-        --wait-ready 60 \\
+        --wait-ready 60 --workload video \\
         --spec '{"kind": "aggregation", "score": "score_count", "err": 0.1}' \\
         --expect-fresh 0
 """
@@ -31,43 +36,77 @@ class ServerError(RuntimeError):
     """Non-2xx response from the query server (message = server's error)."""
 
 
+def _is_conn_refused(e: urllib.error.URLError) -> bool:
+    return isinstance(getattr(e, "reason", None), ConnectionRefusedError)
+
+
 class QueryClient:
-    def __init__(self, url: str, timeout: float = 600.0):
+    def __init__(self, url: str, timeout: float = 600.0,
+                 connect_wait: float = 10.0):
         self.url = url.rstrip("/")
         self.timeout = float(timeout)
+        self.connect_wait = float(connect_wait)
 
     def _call(self, path: str, payload: Optional[Any] = None,
-              method: Optional[str] = None) -> Dict[str, Any]:
+              method: Optional[str] = None,
+              retry_refused: bool = True) -> Dict[str, Any]:
         data = None if payload is None else json.dumps(payload).encode()
         req = urllib.request.Request(
             self.url + path, data=data,
             headers={"Content-Type": "application/json"},
             method=method or ("POST" if data is not None else "GET"))
-        try:
-            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
-                return json.loads(resp.read().decode())
-        except urllib.error.HTTPError as e:
+        deadline = time.monotonic() + self.connect_wait
+        backoff = 0.05
+        while True:
             try:
-                detail = json.loads(e.read().decode()).get("error", str(e))
-            except Exception:  # noqa: BLE001 - best-effort error detail
-                detail = str(e)
-            raise ServerError(f"{path}: {detail}") from None
+                with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                    return json.loads(resp.read().decode())
+            except urllib.error.HTTPError as e:
+                try:
+                    detail = json.loads(e.read().decode()).get("error", str(e))
+                except Exception:  # noqa: BLE001 - best-effort error detail
+                    detail = str(e)
+                raise ServerError(f"{path}: {detail}") from None
+            except urllib.error.URLError as e:
+                # the server may simply not have bound its port yet: retry
+                # connection-refused with backoff instead of failing a race
+                # no client can win deterministically
+                if (retry_refused and _is_conn_refused(e)
+                        and time.monotonic() + backoff < deadline):
+                    time.sleep(backoff)
+                    backoff = min(backoff * 2, 1.0)
+                    continue
+                raise
 
     # -- api -----------------------------------------------------------------
-    def query(self, specs: List[Any],
-              budget: Optional[int] = None) -> Dict[str, Any]:
+    def query(self, specs: List[Any], budget: Optional[int] = None,
+              workload: Optional[str] = None) -> Dict[str, Any]:
         """POST specs (dicts or ``QuerySpec`` s); returns the response JSON:
-        ``results`` (per-spec rows), ``session``, and ``request`` totals."""
+        ``results`` (per-spec rows), ``session``, and ``request`` totals.
+        ``workload`` routes the whole request to one mounted workload
+        (specs may carry their own ``workload`` field instead)."""
         raw = [s if isinstance(s, dict) else s.to_dict() for s in specs]
-        body: Any = raw if budget is None else {"specs": raw, "budget": budget}
+        body: Any = raw
+        if budget is not None or workload is not None:
+            body = {"specs": raw}
+            if budget is not None:
+                body["budget"] = budget
+            if workload is not None:
+                body["workload"] = workload
         return self._call("/query", payload=body)
 
     def stats(self) -> Dict[str, Any]:
         return self._call("/stats")
 
+    def workloads(self) -> Dict[str, Any]:
+        """What the server has mounted: ``{"default": ..., "workloads":
+        [{"name", "default", "loaded", "records", ...}, ...]}``."""
+        return self._call("/workloads")
+
     def healthy(self) -> bool:
         try:
-            return bool(self._call("/healthz").get("ok"))
+            # single probe: wait_ready owns the polling cadence
+            return bool(self._call("/healthz", retry_refused=False).get("ok"))
         except (ServerError, OSError):
             return False
 
@@ -95,9 +134,20 @@ def main(argv=None) -> None:
                     help="file holding a JSON list of QuerySpecs")
     ap.add_argument("--budget", type=int, default=None,
                     help="session budget for this request (never coalesced)")
+    ap.add_argument("--workload", default=None,
+                    help="mounted workload to route this request to "
+                         "(default: the server's default workload)")
     ap.add_argument("--wait-ready", type=float, default=0.0,
                     help="poll /healthz for up to this many seconds first")
+    ap.add_argument("--connect-wait", type=float, default=10.0,
+                    help="retry connection-refused with backoff for up to "
+                         "this many seconds (startup race, no sleep needed)")
     ap.add_argument("--stats", action="store_true", help="print /stats")
+    ap.add_argument("--list-workloads", action="store_true",
+                    help="print /workloads")
+    ap.add_argument("--expect-workloads", default=None,
+                    help="comma-separated workload names; exit non-zero "
+                         "unless /workloads lists every one (CI assertion)")
     ap.add_argument("--shutdown", action="store_true",
                     help="stop the server (after any query)")
     ap.add_argument("--expect-fresh", type=int, default=None,
@@ -105,7 +155,7 @@ def main(argv=None) -> None:
                          "total equals this (CI assertion)")
     args = ap.parse_args(argv)
 
-    client = QueryClient(args.url)
+    client = QueryClient(args.url, connect_wait=args.connect_wait)
     if args.wait_ready > 0:
         client.wait_ready(timeout=args.wait_ready)
 
@@ -117,7 +167,7 @@ def main(argv=None) -> None:
         specs.append(json.loads(s))
 
     if specs:
-        out = client.query(specs, budget=args.budget)
+        out = client.query(specs, budget=args.budget, workload=args.workload)
         print(json.dumps(out, indent=2))
         if args.expect_fresh is not None:
             got = out["request"]["fresh"]
@@ -128,6 +178,18 @@ def main(argv=None) -> None:
     elif args.expect_fresh is not None:
         ap.error("--expect-fresh needs --spec/--specs-file")
 
+    if args.list_workloads or args.expect_workloads:
+        wls = client.workloads()
+        if args.list_workloads:
+            print(json.dumps(wls, indent=2))
+        if args.expect_workloads:
+            mounted = {w["name"] for w in wls["workloads"]}
+            missing = [n for n in args.expect_workloads.split(",")
+                       if n and n not in mounted]
+            if missing:
+                print(f"expected workloads {missing} not mounted "
+                      f"(mounted: {sorted(mounted)})", file=sys.stderr)
+                sys.exit(1)
     if args.stats:
         print(json.dumps(client.stats(), indent=2))
     if args.shutdown:

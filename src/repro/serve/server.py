@@ -1,31 +1,44 @@
-"""``QueryServer``: concurrent query sessions over one engine, via HTTP.
+"""``QueryServer``: concurrent query sessions over many workloads, via HTTP.
 
 The system's first long-lived, multi-client layer.  Clients POST JSON
 ``QuerySpec`` lists (the same schema as ``repro.launch.query``); the server
 
-* **coalesces** — requests arriving within one *admission window* are merged
-  into a single shared :class:`~repro.core.session.QuerySession`, so strangers'
-  queries share joint planning, the stratified sample, and one combined
-  oracle flush (the whole point of sessions, paper §4/§5);
-* **runs sessions concurrently** — batches execute on a worker pool over one
-  :class:`~repro.core.engine.QueryEngine` /
-  :class:`~repro.core.broker.OracleBroker`, whose locks make concurrent
-  sessions produce results identical to isolated runs; with
-  ``--oracle-replicas N`` every session's flushes shard across the engine's
-  one :class:`~repro.core.oracle_pool.OraclePool` of target-DNN replicas
-  (stopped by :meth:`QueryServer.shutdown` after the last session drains);
-* **persists** — with a :class:`~repro.serve.store.LabelStore` attached to
-  the broker, every flush is written through to disk, so a restarted server
-  answers repeat queries with zero fresh target-DNN invocations.
+* **routes** — a :class:`~repro.serve.registry.WorkloadRegistry` mounts N
+  workloads, each with its own :class:`~repro.core.index.TastiIndex`,
+  :class:`~repro.core.engine.QueryEngine`, label store, and oracle replica
+  pool; specs carry an optional ``workload`` field (or the request body a
+  ``workload`` key) and default to the registry's default workload, so a
+  single-workload server keeps today's API unchanged;
+* **coalesces per workload** — requests arriving within one *admission
+  window* are merged into a single shared
+  :class:`~repro.core.session.QuerySession`, so strangers' queries share
+  joint planning, the stratified sample, and one combined oracle flush (the
+  whole point of sessions, paper §4/§5).  Each workload has its own
+  admission lane: concurrent requests to the same workload still coalesce,
+  while different workloads admit and execute independently;
+* **runs sessions concurrently** — batches from every lane execute on ONE
+  shared worker pool, each against its workload's engine/broker, whose locks
+  make concurrent sessions produce results identical to isolated runs; with
+  per-workload ``oracle_replicas`` every session's flushes shard across that
+  workload's :class:`~repro.core.oracle_pool.OraclePool` of target-DNN
+  replicas;
+* **persists per workload** — with a :class:`~repro.serve.store.LabelStore`
+  attached, every flush is written through to disk, so a restarted server
+  answers repeats on *every* mounted workload with zero fresh target-DNN
+  invocations.
 
 Endpoints (all JSON):
 
 * ``POST /query`` — body is either a list of spec dicts or
-  ``{"specs": [...], "budget": int}``; responds with per-spec result rows
-  plus session- and request-level label accounting;
-* ``GET /stats`` — server counters, engine/broker stats, per-account
-  fresh/cached counters, store and index info;
-* ``GET /healthz`` — readiness probe;
+  ``{"specs": [...], "budget": int, "workload": str}``; responds with
+  per-spec result rows plus session- and request-level label accounting;
+* ``GET /stats`` — global server counters plus a per-workload ``workloads``
+  map (engine/broker stats, per-account fresh/cached counters, store and
+  index info); the default workload's sections are mirrored at top level
+  for single-workload compatibility;
+* ``GET /workloads`` — what is mounted: per workload name, default flag,
+  loaded state, records/reps, store size, request count;
+* ``GET /healthz`` — readiness probe (with per-workload loaded flags);
 * ``POST /shutdown`` — clean stop (also available as ``server.shutdown()``).
 """
 from __future__ import annotations
@@ -37,13 +50,20 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 from repro.core.codec import result_row
 from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.session import QuerySession
+from repro.serve.registry import DEFAULT_WORKLOAD, WorkloadEntry, WorkloadRegistry
 
 _STOP = object()  # admission-queue sentinel
+
+_WL_COUNTERS = ("requests", "specs", "sessions", "coalesced", "errors")
+
+
+class UnknownWorkload(ValueError):
+    """A submission named a workload the registry has not mounted."""
 
 
 @dataclass
@@ -51,6 +71,7 @@ class _Submission:
     """One client request, from admission to response."""
     specs: List[QuerySpec]
     budget: Optional[int]
+    workload: str = DEFAULT_WORKLOAD
     done: threading.Event = field(default_factory=threading.Event)
     rows: Optional[List[dict]] = None
     session: Optional[Dict[str, Any]] = None
@@ -58,31 +79,57 @@ class _Submission:
     status: int = 200
 
 
-class QueryServer:
-    """Serves ``QuerySpec`` lists over HTTP against one shared engine.
+class _Lane:
+    """One workload's admission lane: a queue plus the thread batching it."""
 
-        server = QueryServer(engine, store=store, admission_window=0.05)
+    def __init__(self, server: "QueryServer", workload: str):
+        self.queue: "queue.Queue" = queue.Queue()
+        self.thread = threading.Thread(
+            target=server._admission_loop, args=(workload, self.queue),
+            name=f"query-admit-{workload}", daemon=True)
+
+
+class QueryServer:
+    """Serves ``QuerySpec`` lists over HTTP against mounted workloads.
+
+        server = QueryServer(registry, admission_window=0.05)
         server.start()           # returns once the port is bound
         print(server.url)        # http://127.0.0.1:<port>
         ...
         server.shutdown()
 
+    The first argument is either a :class:`WorkloadRegistry` (multi-workload)
+    or a bare :class:`QueryEngine` — the legacy single-engine form, wrapped
+    into a one-entry registry under the default workload name (``store``
+    may only be passed in that form; registry entries carry their own).
+
     ``admission_window`` (seconds) is how long the first arrival of a batch
-    waits for co-travelers; ``max_workers`` caps concurrently executing
-    sessions.  Submissions carrying their own ``budget`` are never coalesced
-    (a combined budget across strangers has no owner to answer to).
+    waits for co-travelers *on the same workload*; ``max_workers`` caps
+    concurrently executing sessions across all workloads.  Submissions
+    carrying their own ``budget`` are never coalesced (a combined budget
+    across strangers has no owner to answer to).
     """
 
-    def __init__(self, engine: QueryEngine, host: str = "127.0.0.1",
+    def __init__(self, source: Union[QueryEngine, WorkloadRegistry],
+                 host: str = "127.0.0.1",
                  port: int = 0, admission_window: float = 0.05,
                  max_workers: int = 4, store=None,
                  request_timeout: float = 600.0, session_kw: Optional[dict] = None):
-        self.engine = engine
+        if isinstance(source, WorkloadRegistry):
+            if store is not None:
+                raise ValueError("store= only applies to the single-engine "
+                                 "form; registry entries carry their own "
+                                 "stores")
+            self.registry = source
+        else:
+            self.registry = WorkloadRegistry()
+            self.registry.register(DEFAULT_WORKLOAD, source, store=store)
+        if not self.registry.names():
+            raise ValueError("registry has no workloads mounted")
         self.host = host
         self.port = int(port)          # 0 = ephemeral; real port set by start()
         self.admission_window = float(admission_window)
         self.max_workers = int(max_workers)
-        self.store = store
         self.request_timeout = float(request_timeout)
         self.session_kw = dict(session_kw or {})
         self.stats: Dict[str, int] = {
@@ -93,12 +140,24 @@ class QueryServer:
             "errors": 0,       # sessions that raised
         }
         self._stats_lock = threading.Lock()
-        self._queue: "queue.Queue" = queue.Queue()
+        self._wl_stats: Dict[str, Dict[str, int]] = {}
+        self._lanes: Dict[str, _Lane] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
         self._http: Optional[ThreadingHTTPServer] = None
-        self._threads: List[threading.Thread] = []
+        self._http_thread: Optional[threading.Thread] = None
         self._started = False
         self._done = threading.Event()
+
+    # -- single-workload conveniences (legacy API; tests and benchmarks) -----
+    @property
+    def engine(self) -> QueryEngine:
+        """The default workload's engine (loads it if still lazy)."""
+        return self.registry.get().engine
+
+    @property
+    def store(self):
+        """The default workload's label store (loads it if still lazy)."""
+        return self.registry.get().store
 
     # -- lifecycle -----------------------------------------------------------
     @property
@@ -109,6 +168,7 @@ class QueryServer:
         if self._started:
             raise RuntimeError("server already started")
         self._started = True
+        self._done.clear()   # a restarted server's wait() must block again
         self._pool = ThreadPoolExecutor(
             max_workers=self.max_workers,
             thread_name_prefix="query-session")
@@ -120,68 +180,114 @@ class QueryServer:
         self._http = ThreadingHTTPServer((self.host, self.port), Handler)
         self._http.daemon_threads = True
         self.port = self._http.server_address[1]
-        self._admit_thread = threading.Thread(
-            target=self._admission_loop, name="query-admit", daemon=True)
         self._http_thread = threading.Thread(
             target=self._http.serve_forever, name="query-http", daemon=True)
-        self._threads = [self._admit_thread, self._http_thread]
-        for t in self._threads:
-            t.start()
+        self._http_thread.start()
         return self
 
     def shutdown(self) -> None:
-        """Stop accepting, drain in-flight sessions, persist the store."""
+        """Stop accepting, drain in-flight sessions per workload, stop every
+        engine's replica pool, persist every store."""
         with self._stats_lock:
             if not self._started:
                 return
             self._started = False
-        self._queue.put(_STOP)
+            lanes = list(self._lanes.values())
+        for lane in lanes:
+            lane.queue.put(_STOP)
         if self._http is not None:
             self._http.shutdown()
             self._http.server_close()
-        # the admission loop must be DONE handing batches to the pool before
-        # the pool stops accepting, or an admitted batch dies on submit()
-        # with its clients left waiting
-        for t in self._threads:
-            t.join(timeout=30.0)
+        # every admission lane must be DONE handing batches to the pool
+        # before the pool stops accepting, or an admitted batch dies on
+        # submit() with its clients left waiting
+        if self._http_thread is not None:
+            self._http_thread.join(timeout=30.0)
+        for lane in lanes:
+            lane.thread.join(timeout=30.0)
         if self._pool is not None:
             self._pool.shutdown(wait=True)
-        # sessions are drained: stop the engine's target-DNN replica pool
-        # (no-op when sharding is off or the pool is externally owned)
-        self.engine.close()
-        if self.store is not None:
-            self.store.save()
+        # the lane threads above have exited: drop them so a restarted
+        # server spawns fresh lanes instead of enqueueing onto dead queues
+        with self._stats_lock:
+            self._lanes.clear()
+        # sessions are drained: per workload, stop the engine's target-DNN
+        # replica pool and save the label store
+        self.registry.close()
         self._done.set()
 
     def wait(self) -> None:
         """Block (interruptibly) until :meth:`shutdown` has fully finished —
-        including the final store save.  The serving CLI parks on this."""
+        including the final store saves.  The serving CLI parks on this."""
         while not self._done.wait(timeout=0.5):
             pass
 
     # -- admission -----------------------------------------------------------
-    def submit(self, specs: List[QuerySpec],
-               budget: Optional[int] = None) -> _Submission:
-        """Enqueue one submission for the admission loop (HTTP-free entry
-        point; the handler and in-process tests both use it).  Raises
+    def _resolve_workload(self, specs: List[QuerySpec],
+                          workload: Optional[str]) -> str:
+        """One submission routes to one workload: the request-level name
+        (which covers every spec), else the specs' unanimous ``workload``
+        fields, else the default.  Partial spec-level routing without a
+        request-level name is rejected — silently dragging an unrouted
+        spec onto its neighbor's index would answer it from the wrong
+        workload."""
+        explicit = {s.workload for s in specs if s.workload is not None}
+        if len(explicit) > 1:
+            raise ValueError(
+                f"one request routes to one workload, got "
+                f"{sorted(explicit)}; split the request per workload")
+        if workload is not None:
+            name = workload
+            if explicit and explicit != {workload}:
+                raise ValueError(
+                    f"request routes to {workload!r} but a spec names "
+                    f"{explicit.pop()!r}")
+        elif explicit:
+            name = explicit.pop()
+            if any(s.workload is None for s in specs):
+                raise ValueError(
+                    "some specs carry a workload and others none; set the "
+                    "request-level 'workload' or stamp every spec")
+        else:
+            name = self.registry.default
+        if name not in self.registry:
+            raise UnknownWorkload(
+                f"unknown workload {name!r}; mounted: "
+                f"{sorted(self.registry.names())}")
+        return name
+
+    def submit(self, specs: List[QuerySpec], budget: Optional[int] = None,
+               workload: Optional[str] = None) -> _Submission:
+        """Enqueue one submission for its workload's admission lane
+        (HTTP-free entry point; the handler and in-process tests both use
+        it).  Raises :class:`UnknownWorkload` for unmounted names and
         ``RuntimeError`` once shutdown has begun — callers must not be left
-        waiting on a submission no loop will ever pick up."""
-        sub = _Submission(specs=specs, budget=budget)
+        waiting on a submission no lane will ever pick up."""
+        name = self._resolve_workload(specs, workload)
+        sub = _Submission(specs=specs, budget=budget, workload=name)
         with self._stats_lock:
             if not self._started:
                 raise RuntimeError("server is shutting down")
             self.stats["requests"] += 1
             self.stats["specs"] += len(specs)
+            ws = self._wl_stats.setdefault(name,
+                                           dict.fromkeys(_WL_COUNTERS, 0))
+            ws["requests"] += 1
+            ws["specs"] += len(specs)
+            lane = self._lanes.get(name)
+            if lane is None:
+                lane = self._lanes[name] = _Lane(self, name)
+                lane.thread.start()
             # under the same lock shutdown() flips _started: either this
             # submission is enqueued before _STOP, or submit() raises
-            self._queue.put(sub)
+            lane.queue.put(sub)
         return sub
 
-    def _admission_loop(self) -> None:
+    def _admission_loop(self, workload: str, q: "queue.Queue") -> None:
         while True:
-            sub = self._queue.get()
+            sub = q.get()
             if sub is _STOP:
-                self._drain_on_stop()
+                self._drain_on_stop(q)
                 return
             batch = [sub]
             if sub.budget is None and self.admission_window > 0:
@@ -191,34 +297,44 @@ class QueryServer:
                     if remaining <= 0:
                         break
                     try:
-                        nxt = self._queue.get(timeout=remaining)
+                        nxt = q.get(timeout=remaining)
                     except queue.Empty:
                         break
                     if nxt is _STOP:
-                        self._queue.put(_STOP)  # handled next iteration
+                        q.put(_STOP)  # handled next iteration
                         break
                     if nxt.budget is not None:
                         # budgeted submissions run alone (their cap is theirs)
-                        self._dispatch([nxt])
+                        self._dispatch(workload, [nxt])
                     else:
                         batch.append(nxt)
-            self._dispatch(batch)
+            self._dispatch(workload, batch)
 
-    def _dispatch(self, batch: List[_Submission]) -> None:
+    def _dispatch(self, workload: str, batch: List[_Submission]) -> None:
         try:
-            self._pool.submit(self._run_batch, batch)
+            # lazy workloads pay their index build/load HERE, on their own
+            # admission lane: a cold workload's build delays only its own
+            # lane, never a worker-pool slot another workload's sessions
+            # need (and a memoized failed load fails every later batch fast)
+            entry = self.registry.get(workload)
+        except Exception as e:  # noqa: BLE001 - mount faults are OURS
+            self._fail_batch(workload, batch, e, 500)
+            return
+        try:
+            self._pool.submit(self._run_batch, workload, entry, batch)
         except RuntimeError:  # pool already shut down: fail, don't strand
             for sub in batch:
                 sub.error = "server is shutting down"
                 sub.status = 503
                 sub.done.set()
 
-    def _drain_on_stop(self) -> None:
+    @staticmethod
+    def _drain_on_stop(q: "queue.Queue") -> None:
         """Fail any submission that raced in behind the _STOP sentinel
         instead of leaving its client blocked until request_timeout."""
         while True:
             try:
-                sub = self._queue.get_nowait()
+                sub = q.get_nowait()
             except queue.Empty:
                 return
             if sub is _STOP:
@@ -228,19 +344,27 @@ class QueryServer:
             sub.done.set()
 
     # -- execution -----------------------------------------------------------
-    def _fail_batch(self, batch: List[_Submission], e: Exception,
-                    status: int) -> None:
+    def _bump(self, workload: str, **deltas: int) -> None:
         with self._stats_lock:
-            self.stats["errors"] += 1
+            ws = self._wl_stats.setdefault(workload,
+                                           dict.fromkeys(_WL_COUNTERS, 0))
+            for k, v in deltas.items():
+                self.stats[k] += v
+                ws[k] += v
+
+    def _fail_batch(self, workload: str, batch: List[_Submission],
+                    e: Exception, status: int) -> None:
+        self._bump(workload, errors=1)
         for sub in batch:
             sub.error = f"{type(e).__name__}: {e}"
             sub.status = status
             sub.done.set()
 
-    def _run_batch(self, batch: List[_Submission]) -> None:
+    def _run_batch(self, workload: str, entry: WorkloadEntry,
+                   batch: List[_Submission]) -> None:
         specs = [s for sub in batch for s in sub.specs]
         budget = batch[0].budget if len(batch) == 1 else None
-        session = QuerySession(self.engine, specs, budget=budget,
+        session = QuerySession(entry.engine, specs, budget=budget,
                                **self.session_kw)
         try:
             # plan separately first: it spends no oracle budget, and its
@@ -248,15 +372,16 @@ class QueryServer:
             # budgets) are the CLIENT's — 400
             session.plan()
         except Exception as e:  # noqa: BLE001 - fault barrier per batch
-            self._fail_batch(batch, e, 400)
+            self._fail_batch(workload, batch, e, 400)
             return
         try:
             out = session.execute()
         except Exception as e:  # noqa: BLE001 - execution faults are OURS
-            self._fail_batch(batch, e, 500)
+            self._fail_batch(workload, batch, e, 500)
             return
-        rows = [result_row(r) for r in out.results]
+        rows = [result_row(r, workload=workload) for r in out.results]
         session = {**out.stats,
+                   "workload": workload,
                    "coalesced_requests": len(batch),
                    "coalesced_specs": len(specs)}
         pos = 0
@@ -265,20 +390,17 @@ class QueryServer:
             pos += len(sub.specs)
             sub.session = session
             sub.done.set()
-        with self._stats_lock:
-            self.stats["sessions"] += 1
-            self.stats["coalesced"] += len(batch) - 1
+        self._bump(workload, sessions=1, coalesced=len(batch) - 1)
 
     # -- introspection -------------------------------------------------------
-    def stats_payload(self) -> Dict[str, Any]:
-        engine, broker = self.engine, self.engine.broker
+    @staticmethod
+    def _entry_payload(entry: WorkloadEntry) -> Dict[str, Any]:
+        """Engine/broker/accounts/index/store/pool sections for one loaded
+        workload (the pre-registry /stats body, now per workload)."""
+        engine = entry.engine
+        broker = engine.broker
         snapshot = broker.snapshot()
-        with self._stats_lock:
-            server_stats = dict(self.stats)
         payload: Dict[str, Any] = {
-            "server": {**server_stats,
-                       "admission_window_s": self.admission_window,
-                       "max_workers": self.max_workers},
             "engine": dict(engine.stats),
             "broker": snapshot,
             "accounts": {
@@ -295,11 +417,59 @@ class QueryServer:
         pool = engine.oracle_pool
         if pool is not None:
             payload["oracle_pool"] = pool.snapshot()
-        if self.store is not None:
-            payload["store"] = {"path": str(self.store.path),
-                                "n_labels": len(self.store),
-                                "index_version": self.store.index_version}
+        if entry.store is not None:
+            payload["store"] = {"path": str(entry.store.path),
+                                "n_labels": len(entry.store),
+                                "index_version": entry.store.index_version}
         return payload
+
+    def stats_payload(self) -> Dict[str, Any]:
+        default = self.registry.default
+        with self._stats_lock:
+            server_stats = dict(self.stats)
+            wl_stats = {k: dict(v) for k, v in self._wl_stats.items()}
+        payload: Dict[str, Any] = {
+            "server": {**server_stats,
+                       "admission_window_s": self.admission_window,
+                       "max_workers": self.max_workers,
+                       "default_workload": default},
+            "workloads": {},
+        }
+        for entry in self.registry.entries():
+            wp: Dict[str, Any] = {"loaded": entry.loaded}
+            if entry.loaded:
+                wp.update(self._entry_payload(entry))
+            wp["server"] = wl_stats.get(entry.name,
+                                        dict.fromkeys(_WL_COUNTERS, 0))
+            payload["workloads"][entry.name] = wp
+        # single-workload compatibility: the default workload's sections are
+        # mirrored at top level (exactly the pre-registry payload shape) —
+        # the SAME dict objects, one broker snapshot, so the mirror can
+        # never disagree with the per-workload section within one response
+        mirror = payload["workloads"].get(default)
+        if mirror is not None and mirror["loaded"]:
+            payload.update({k: v for k, v in mirror.items()
+                            if k not in ("loaded", "server")})
+        return payload
+
+    def workloads_payload(self) -> Dict[str, Any]:
+        with self._stats_lock:
+            wl_stats = {k: dict(v) for k, v in self._wl_stats.items()}
+        rows = self.registry.describe()
+        for row in rows:
+            row["requests"] = wl_stats.get(row["name"], {}).get("requests", 0)
+        return {"default": self.registry.default, "workloads": rows}
+
+    def health_payload(self) -> Dict[str, Any]:
+        workloads = {}
+        for e in self.registry.entries():
+            w: Dict[str, Any] = {"loaded": e.loaded}
+            if e.load_error is not None:
+                w["error"] = str(e.load_error)
+            workloads[e.name] = w
+        # ok means the server itself is serving; a dead mount is visible
+        # per workload (its requests fail fast with the memoized error)
+        return {"ok": True, "workloads": workloads}
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -318,9 +488,11 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_GET(self) -> None:
         if self.path == "/healthz":
-            self._reply(200, {"ok": True})
+            self._reply(200, self.owner.health_payload())
         elif self.path == "/stats":
             self._reply(200, self.owner.stats_payload())
+        elif self.path == "/workloads":
+            self._reply(200, self.owner.workloads_payload())
         else:
             self._reply(404, {"error": f"unknown path {self.path}"})
 
@@ -328,7 +500,7 @@ class _Handler(BaseHTTPRequestHandler):
         if self.path == "/shutdown":
             self._reply(200, {"ok": True, "shutting_down": True})
             # a fresh NON-daemon thread: shutdown() joins the serving threads
-            # and must survive the main thread exiting (its final store.save
+            # and must survive the main thread exiting (its final store save
             # must not be killed mid-write)
             threading.Thread(target=self.owner.shutdown).start()
             return
@@ -338,14 +510,17 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             length = int(self.headers.get("Content-Length", 0))
             body = json.loads(self.rfile.read(length) or b"null")
+            workload = None
             if isinstance(body, list):
                 raw_specs, budget = body, None
             elif isinstance(body, dict):
                 raw_specs = body.get("specs")
                 budget = body.get("budget")
+                workload = body.get("workload")
             else:
-                raise ValueError("body must be a JSON list of specs or "
-                                 "{'specs': [...], 'budget': int}")
+                raise ValueError(
+                    "body must be a JSON list of specs or {'specs': [...], "
+                    "'budget': int, 'workload': str}")
             if not raw_specs:
                 raise ValueError("no specs in request")
             specs = [QuerySpec.from_dict(d) for d in raw_specs]
@@ -353,7 +528,10 @@ class _Handler(BaseHTTPRequestHandler):
             self._reply(400, {"error": f"{type(e).__name__}: {e}"})
             return
         try:
-            sub = self.owner.submit(specs, budget=budget)
+            sub = self.owner.submit(specs, budget=budget, workload=workload)
+        except ValueError as e:  # unknown or inconsistent workload routing
+            self._reply(400, {"error": str(e)})
+            return
         except RuntimeError as e:
             self._reply(503, {"error": str(e)})
             return
@@ -367,6 +545,7 @@ class _Handler(BaseHTTPRequestHandler):
             "results": sub.rows,
             "session": sub.session,
             "request": {
+                "workload": sub.workload,
                 "n_specs": len(sub.rows),
                 "fresh": sum(r["n_oracle_fresh"] for r in sub.rows),
                 "cached": sum(r["n_oracle_cached"] for r in sub.rows),

@@ -1,7 +1,10 @@
 """Query-serving subsystem tests: persistent LabelStore (round-trip,
 invalidation, write-through), concurrent-session parity over one thread-safe
-broker, and the HTTP QueryServer end to end (admission-window coalescing,
-/stats accounting, warm repeat requests costing zero fresh labels)."""
+broker, the HTTP QueryServer end to end (admission-window coalescing,
+/stats accounting, warm repeat requests costing zero fresh labels), and
+multi-workload routing (registry mounts, per-workload admission lanes and
+accounting parity vs isolated servers, manifest lazy-load + warm restart)."""
+import json
 import threading
 
 import numpy as np
@@ -11,7 +14,13 @@ from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.index import TastiIndex
 from repro.core.schema import make_workload
 from repro.core.session import QuerySession
-from repro.serve import LabelStore, QueryClient, QueryServer
+from repro.serve import (
+    LabelStore,
+    QueryClient,
+    QueryServer,
+    WorkloadRegistry,
+    WorkloadSpec,
+)
 
 pytestmark = pytest.mark.tier1
 
@@ -25,6 +34,17 @@ def wl():
 def index(wl):
     return TastiIndex.build(wl.features, 120, wl.target_dnn_batch, k=4,
                             random_fraction=0.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl_text():
+    return make_workload("wikisql", n_records=900)
+
+
+@pytest.fixture(scope="module")
+def index_text(wl_text):
+    return TastiIndex.build(wl_text.features, 90, wl_text.target_dnn_batch,
+                            k=4, random_fraction=0.0, seed=0)
 
 
 SPECS = [QuerySpec(kind="aggregation", score="score_count", err=0.2, seed=0),
@@ -400,3 +420,292 @@ def test_server_rejects_malformed_specs(wl, index):
             client.query([{"kind": "selection", "score": "score_has_object"}])
     finally:
         srv.shutdown()
+
+
+# -- multi-workload serving --------------------------------------------------
+TEXT_SPECS = [
+    QuerySpec(kind="aggregation", score="score_n_predicates", err=0.2,
+              seed=0),
+    QuerySpec(kind="selection", score="score_is_select", budget=60, seed=0),
+    QuerySpec(kind="limit", score="score_is_select", k_results=3),
+]
+
+
+def _two_workload_registry(wl, index, wl_text, index_text):
+    registry = WorkloadRegistry()
+    registry.register("video", QueryEngine(index, wl))
+    registry.register("text", QueryEngine(index_text, wl_text))
+    return registry
+
+
+def _no_stamp(row):
+    return {k: v for k, v in row.items() if k != "workload"}
+
+
+def test_workload_field_roundtrips_through_spec_json():
+    spec = QuerySpec.from_dict({"kind": "aggregation", "score": "score_count",
+                                "workload": "text"})
+    assert spec.workload == "text"
+    assert spec.to_dict()["workload"] == "text"
+    # unset stays out of the wire form (single-workload requests unchanged)
+    assert "workload" not in QuerySpec(kind="aggregation",
+                                       score="score_count").to_dict()
+
+
+def test_multi_workload_routing_and_listing(wl, index, wl_text, index_text):
+    registry = _two_workload_registry(wl, index, wl_text, index_text)
+    srv = QueryServer(registry, port=0, admission_window=0.0).start()
+    try:
+        client = QueryClient(srv.url)
+        client.wait_ready(10)
+        # request-level routing
+        out_t = client.query([s.to_dict() for s in TEXT_SPECS],
+                             workload="text")
+        assert out_t["request"]["workload"] == "text"
+        assert all(r["workload"] == "text" for r in out_t["results"])
+        # spec-level routing
+        out_s = client.query([{"kind": "aggregation", "workload": "text",
+                               "score": "score_n_predicates", "err": 0.2}])
+        assert out_s["session"]["workload"] == "text"
+        # default routing (first mounted)
+        out_d = client.query([{"kind": "aggregation", "score": "score_count",
+                               "err": 0.2}])
+        assert out_d["request"]["workload"] == "video"
+
+        wls = client.workloads()
+        assert wls["default"] == "video"
+        by_name = {w["name"]: w for w in wls["workloads"]}
+        assert set(by_name) == {"video", "text"}
+        assert by_name["video"]["default"] and by_name["video"]["loaded"]
+        assert by_name["text"]["records"] == index_text.n_records
+        assert by_name["text"]["requests"] == 2
+
+        stats = client.stats()
+        assert set(stats["workloads"]) == {"video", "text"}
+        assert stats["workloads"]["text"]["server"]["requests"] == 2
+        assert stats["workloads"]["video"]["server"]["requests"] == 1
+        # top level mirrors the default workload (legacy payload shape)
+        assert (stats["accounts"]["fresh_total"]
+                == stats["workloads"]["video"]["accounts"]["fresh_total"])
+        assert stats["index"]["records"] == index.n_records
+
+        from repro.serve.client import ServerError
+        with pytest.raises(ServerError, match="unknown workload"):
+            client.query([{"kind": "aggregation", "score": "score_count"}],
+                         workload="speech")
+        with pytest.raises(ServerError, match="one request routes to one"):
+            client.query([
+                {"kind": "aggregation", "score": "score_count",
+                 "workload": "video"},
+                {"kind": "aggregation", "score": "score_n_predicates",
+                 "workload": "text"}])
+        # partial spec-level routing is ambiguous for the unstamped spec
+        with pytest.raises(ServerError, match="others none"):
+            client.query([
+                {"kind": "aggregation", "score": "score_count"},
+                {"kind": "aggregation", "score": "score_n_predicates",
+                 "workload": "text"}])
+        # ...unless a request-level workload covers everything
+        with pytest.raises(ServerError, match="a spec names"):
+            client.query([{"kind": "aggregation", "score": "score_count",
+                           "workload": "video"}], workload="text")
+    finally:
+        srv.shutdown()
+
+
+def test_multi_workload_admission_coalesces_per_workload(wl, index, wl_text,
+                                                         index_text):
+    """Concurrent requests to the SAME workload still share a session;
+    a different workload admits independently (its own lane, no window
+    shared with strangers on another index)."""
+    registry = _two_workload_registry(wl, index, wl_text, index_text)
+    srv = QueryServer(registry, port=0, admission_window=1.0).start()
+    try:
+        client = QueryClient(srv.url)
+        client.wait_ready(10)
+        barrier = threading.Barrier(3)
+        outs = [None, None, None]
+
+        def post(i, spec, workload):
+            barrier.wait(timeout=30)
+            outs[i] = client.query([spec], workload=workload)
+
+        threads = [
+            threading.Thread(target=post, args=(0, {
+                "kind": "aggregation", "score": "score_count", "err": 0.2},
+                "video")),
+            threading.Thread(target=post, args=(1, {
+                "kind": "selection", "score": "score_has_object",
+                "budget": 50}, "video")),
+            threading.Thread(target=post, args=(2, {
+                "kind": "aggregation", "score": "score_n_predicates",
+                "err": 0.2}, "text")),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert all(o is not None for o in outs)
+        assert outs[0]["session"]["coalesced_requests"] == 2
+        assert outs[2]["session"]["coalesced_requests"] == 1
+        stats = QueryClient(srv.url).stats()
+        video, text = (stats["workloads"][n]["server"]
+                       for n in ("video", "text"))
+        assert video["sessions"] == 1 and video["coalesced"] == 1
+        assert text["sessions"] == 1 and text["coalesced"] == 0
+    finally:
+        srv.shutdown()
+
+
+def test_multi_workload_parity_with_isolated_servers(wl, index, wl_text,
+                                                     index_text):
+    """Interleaved concurrent requests to a 2-workload server produce
+    results and per-workload fresh/cached accounting identical to two
+    isolated single-workload servers."""
+    trains = {
+        "video": [[s.to_dict() for s in SPECS],
+                  [{"kind": "aggregation", "score": "score_count",
+                    "err": 0.15, "seed": 1}]],
+        "text": [[s.to_dict() for s in TEXT_SPECS],
+                 [{"kind": "selection", "score": "score_is_select",
+                   "budget": 40, "seed": 1}]],
+    }
+
+    def drive(url, name, workload=None):
+        client = QueryClient(url)
+        client.wait_ready(10)
+        rows, fresh, cached = [], 0, 0
+        for specs in trains[name]:
+            out = client.query(specs, workload=workload)
+            rows.append([_no_stamp(r) for r in out["results"]])
+            fresh += out["request"]["fresh"]
+            cached += out["request"]["cached"]
+        return rows, fresh, cached
+
+    iso = {}
+    for name, (w, idx) in (("video", (wl, index)),
+                           ("text", (wl_text, index_text))):
+        srv = QueryServer(QueryEngine(idx, w), port=0,
+                          admission_window=0.0).start()
+        try:
+            iso[name] = drive(srv.url, name)
+        finally:
+            srv.shutdown()
+
+    registry = _two_workload_registry(wl, index, wl_text, index_text)
+    srv = QueryServer(registry, port=0, admission_window=0.0).start()
+    try:
+        shared = {}
+        errors = []
+        barrier = threading.Barrier(2)
+
+        def run(name):
+            try:
+                barrier.wait(timeout=30)
+                shared[name] = drive(srv.url, name, workload=name)
+            except Exception as e:  # noqa: BLE001 - surfaced below
+                errors.append((name, repr(e)))
+
+        threads = [threading.Thread(target=run, args=(n,)) for n in trains]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        stats = QueryClient(srv.url).stats()
+        for name in trains:
+            assert shared[name] == iso[name]
+            acct = stats["workloads"][name]["accounts"]
+            assert acct["fresh_total"] == iso[name][1]
+            assert acct["cached_total"] == iso[name][2]
+    finally:
+        srv.shutdown()
+
+
+def test_manifest_lazy_load_and_warm_restart_both_workloads(
+        wl, index, wl_text, index_text, tmp_path):
+    """A manifest-mounted server loads workloads lazily, and a warm restart
+    over the per-workload stores answers repeats on BOTH workloads with
+    zero fresh target-DNN invocations."""
+    index.save(str(tmp_path / "video-idx"))
+    index_text.save(str(tmp_path / "text-idx"))
+    manifest = tmp_path / "workloads.json"
+    manifest.write_text(json.dumps({
+        "default": "video",
+        "workloads": {
+            "video": {"dataset": "night-street", "n_frames": wl.n_frames,
+                      "index": str(tmp_path / "video-idx")},
+            "text": {"dataset": "wikisql",
+                     "n_records": wl_text.n_records,
+                     "index": str(tmp_path / "text-idx"),
+                     "store": str(tmp_path / "text-store")},
+        },
+    }))
+    queries = {"video": [s.to_dict() for s in SPECS],
+               "text": [s.to_dict() for s in TEXT_SPECS]}
+
+    registry = WorkloadRegistry.from_manifest(str(manifest))
+    assert registry.default == "video"
+    assert not any(e.loaded for e in registry.entries())
+    srv = QueryServer(registry, port=0, admission_window=0.0).start()
+    first = {}
+    try:
+        client = QueryClient(srv.url)
+        client.wait_ready(10)
+        # lazily mounted: nothing is loaded until a spec routes to it
+        health = {w["name"]: w for w in client.workloads()["workloads"]}
+        assert not health["video"]["loaded"] and not health["text"]["loaded"]
+        first["video"] = client.query(queries["video"])
+        loaded = {w["name"]: w["loaded"]
+                  for w in client.workloads()["workloads"]}
+        assert loaded == {"video": True, "text": False}
+        first["text"] = client.query(queries["text"], workload="text")
+        assert first["video"]["request"]["fresh"] > 0
+        assert first["text"]["request"]["fresh"] > 0
+        # store defaults to the index stem; the manifest may override it
+        stats = QueryClient(srv.url).stats()
+        assert stats["workloads"]["text"]["store"]["path"].endswith(
+            "text-store")
+    finally:
+        srv.shutdown()  # saves every workload's store
+
+    srv = QueryServer(WorkloadRegistry.from_manifest(str(manifest)),
+                      port=0, admission_window=0.0).start()
+    try:
+        client = QueryClient(srv.url)
+        client.wait_ready(10)
+        for name in ("video", "text"):
+            out = client.query(queries[name], workload=name)
+            assert out["request"]["fresh"] == 0, name
+            for a, b in zip(first[name]["results"], out["results"]):
+                assert a.get("estimate") == b.get("estimate")
+                assert a.get("selected_head") == b.get("selected_head")
+                assert a["n_invocations"] == b["n_invocations"]
+    finally:
+        srv.shutdown()
+
+
+def test_registry_rejects_bad_mounts(wl, index):
+    registry = WorkloadRegistry()
+    registry.register("video", QueryEngine(index, wl))
+    with pytest.raises(ValueError, match="already mounted"):
+        registry.register("video", QueryEngine(index, wl))
+    with pytest.raises(KeyError, match="unknown workload"):
+        registry.get("speech")
+    with pytest.raises(ValueError, match="unknown dataset"):
+        WorkloadSpec(name="x", dataset="imagenet")
+    with pytest.raises(ValueError, match="unknown key"):
+        WorkloadSpec.from_dict("x", {"dataset": "wikisql", "bogus": 1})
+
+
+def test_registry_memoizes_a_failed_lazy_load(tmp_path):
+    """A deterministically broken mount (missing index files) fails fast on
+    every later lookup instead of re-running the whole load each time."""
+    registry = WorkloadRegistry()
+    registry.declare(WorkloadSpec(name="broken", dataset="wikisql",
+                                  n_records=200,
+                                  index=str(tmp_path / "missing-idx")))
+    with pytest.raises(FileNotFoundError):
+        registry.get("broken")
+    with pytest.raises(RuntimeError, match="failed to load previously"):
+        registry.get("broken")
