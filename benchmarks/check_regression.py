@@ -52,9 +52,11 @@ def flatten(obj, prefix: str = "") -> Dict[str, float]:
 
 
 def check(baseline: dict, currents: Dict[str, Dict[str, float]],
-          scales: Dict[str, float]) -> List[str]:
+          scales: Dict[str, float], subset: bool = False) -> List[str]:
     """Returns failure messages (empty = gate green); prints one verdict
-    line per metric."""
+    line per metric.  With ``subset``, baseline metrics whose alias has no
+    ``--current`` file are skipped (printed, not failed) — for CI jobs that
+    each gate their own slice of the baseline."""
     default_tol = float(baseline.get("default_tolerance", 0.25))
     failures: List[str] = []
     for key, m in baseline["metrics"].items():
@@ -63,6 +65,10 @@ def check(baseline: dict, currents: Dict[str, Dict[str, float]],
         if direction not in ("higher", "lower"):
             raise ValueError(f"{key}: direction must be higher|lower")
         if alias not in currents:
+            if subset:
+                print(f"[skip] {key}: alias {alias!r} not in this job's "
+                      "slice")
+                continue
             failures.append(f"{key}: no --current file for alias {alias!r}")
             continue
         cur = currents[alias].get(path)
@@ -106,6 +112,11 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="multiply an observed metric before checking "
                          "(synthetic-regression injection for gate "
                          "self-tests; repeatable)")
+    ap.add_argument("--subset", action="store_true",
+                    help="skip baseline metrics whose alias has no "
+                         "--current file (CI jobs that each gate a slice "
+                         "of the baseline; without this, a missing alias "
+                         "fails the gate)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="refresh the baseline's values from the current "
                          "run instead of checking (directions/tolerances "
@@ -136,6 +147,8 @@ def main(argv: Optional[List[str]] = None) -> None:
     if args.write_baseline:
         for key, m in baseline["metrics"].items():
             alias, _, path = key.partition(":")
+            if args.subset and alias not in currents:
+                continue  # refresh only this job's slice
             cur = currents.get(alias, {}).get(path)
             if cur is None:
                 sys.exit(f"cannot refresh {key}: metric missing from "
@@ -147,7 +160,7 @@ def main(argv: Optional[List[str]] = None) -> None:
         print(f"baseline {args.baseline} refreshed from current run")
         return
 
-    failures = check(baseline, currents, scales)
+    failures = check(baseline, currents, scales, subset=args.subset)
     if failures:
         print(f"\nbench-gate: {len(failures)} regression(s):",
               file=sys.stderr)

@@ -306,10 +306,16 @@ class OracleBroker:
         with self._lock:
             return len(self._pending)
 
-    def flush(self) -> int:
+    def flush(self, limit: Optional[int] = None) -> int:
         """Label everything pending, in microbatches of ``max_batch``.
         Fresh charges land on the account that enqueued each id.  Returns
         the number of records labeled.
+
+        ``limit`` reserves only the first ``limit`` pending ids (insertion
+        order) instead of draining the queue — the scheduler's preemption
+        slices flush a long prefetch in bounded steps so a higher-priority
+        session can run between them.  Charging is per id, so a limited
+        flush sequence is byte-identical in accounting to one full drain.
 
         Three phases (the reservation scheme): **reserve** — pending ids move
         to the in-flight map under the lock, so concurrent requests dedup
@@ -325,7 +331,12 @@ class OracleBroker:
             if not self._pending:
                 return 0
             queued = list(self._pending.items())  # insertion order
-            self._pending.clear()
+            if limit is not None and 0 < limit < len(queued):
+                queued = queued[:limit]
+                for i, _ in queued:
+                    del self._pending[i]
+            else:
+                self._pending.clear()
             reserved: List[Tuple[int, Optional[OracleAccount]]] = []
             for i, owner in queued:
                 # a forced fetch() may have labeled a pending id meanwhile:

@@ -27,6 +27,13 @@ def result_row(res, workload: Optional[str] = None) -> Dict[str, Any]:
     }
     if workload is not None:
         row["workload"] = workload
+    # scheduling fields echo back only when the caller set them, so rows
+    # from unscheduled runs stay byte-identical to pre-scheduler output
+    spec = res.plan.spec
+    if spec.priority is not None:
+        row["priority"] = int(spec.priority)
+    if spec.deadline_ms is not None:
+        row["deadline_ms"] = float(spec.deadline_ms)
     if res.estimate is not None:
         row["estimate"] = round(res.estimate, 6)
     if res.ci_half_width is not None:

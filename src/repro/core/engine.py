@@ -86,10 +86,18 @@ class QuerySpec:
     # it — score names already resolve against the engine's own workload)
     workload: Optional[str] = None
 
+    # scheduling (serving layer only; the engine itself ignores both):
+    # `priority` is the scheduling class (0 = most urgent; None -> the
+    # server's default class), `deadline_ms` a soft latency target relative
+    # to arrival that orders same-class work earliest-deadline-first
+    priority: Optional[int] = None
+    deadline_ms: Optional[float] = None
+
     _JSON_FIELDS = ("kind", "score", "propagation", "n_classes", "err",
                     "delta", "recall_target", "budget", "k_results", "batch",
                     "min_samples", "max_samples", "max_invocations", "use_cv",
-                    "seed", "score_key", "reuse_labels", "crack", "workload")
+                    "seed", "score_key", "reuse_labels", "crack", "workload",
+                    "priority", "deadline_ms")
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "QuerySpec":
@@ -347,15 +355,40 @@ class QueryEngine:
 
     # -- oracle with the shared label cache ----------------------------------
     def _make_oracle(self, score_fn: Callable, reuse: bool,
-                     account: OracleAccount
+                     account: OracleAccount,
+                     checkpoint: Optional[Callable[[], None]] = None,
+                     slice_size: Optional[int] = None
                      ) -> Callable[[np.ndarray], np.ndarray]:
         """Wrap the broker for one query: blocking calls return scores.
         Sessions enqueue ahead of execution through the broker's futures API
-        (``request``/``prefetch``) against the same account."""
+        (``request``/``prefetch``) against the same account.
+
+        ``checkpoint`` is the scheduler's preemption hook: it is called at
+        every oracle interaction and between ``slice_size``-id slices of
+        large fetches, and may block (the serving scheduler parks a
+        preempted query there while higher-priority work runs).  Slicing
+        only inserts scheduling points — the same ids reach the broker in
+        the same order against the same account, so fresh/cached accounting
+        and labels are byte-identical to the unchunked path."""
         broker = self.broker
+        step = int(slice_size) if slice_size else self.max_oracle_batch
 
         def call(ids) -> np.ndarray:
-            anns = broker.fetch(ids, account=account, reuse=reuse)
+            ids = np.asarray(ids, np.int64).ravel()
+            if checkpoint is None:
+                anns: List[Any] = broker.fetch(ids, account=account,
+                                               reuse=reuse)
+            else:
+                checkpoint()
+                if len(ids) <= step:
+                    anns = broker.fetch(ids, account=account, reuse=reuse)
+                else:
+                    anns = []
+                    for k, start in enumerate(range(0, len(ids), step)):
+                        if k:
+                            checkpoint()
+                        anns.extend(broker.fetch(ids[start:start + step],
+                                                 account=account, reuse=reuse))
             return np.asarray([score_fn(a) for a in anns], np.float64)
 
         return call
@@ -409,10 +442,15 @@ class QueryEngine:
         return proxy
 
     def execute(self, spec_or_plan: Union[QuerySpec, QueryPlan],
-                account: Optional[OracleAccount] = None) -> QueryResult:
+                account: Optional[OracleAccount] = None,
+                checkpoint: Optional[Callable[[], None]] = None,
+                slice_size: Optional[int] = None) -> QueryResult:
         """Run one query.  ``account`` carries the oracle accounting; a
         session passes one per spec (pre-charged by its prefetch phase) so
-        per-spec fresh/cached counts stay exact under cross-spec dedup."""
+        per-spec fresh/cached counts stay exact under cross-spec dedup.
+        ``checkpoint``/``slice_size`` make execution preemptible at oracle-
+        slice boundaries (see :meth:`_make_oracle`) without changing labels
+        or accounting."""
         plan = (spec_or_plan if isinstance(spec_or_plan, QueryPlan)
                 else self.plan(spec_or_plan))
         # each execution owns its trace: re-executing a caller-held plan must
@@ -432,7 +470,9 @@ class QueryEngine:
         acct = account if account is not None else \
             self.broker.account(name=spec.kind)
         fresh0, cached0 = acct.fresh, acct.cached
-        oracle = self._make_oracle(score_fn, spec.reuse_labels, acct)
+        oracle = self._make_oracle(score_fn, spec.reuse_labels, acct,
+                                   checkpoint=checkpoint,
+                                   slice_size=slice_size)
 
         raw = plan.executor.execute(plan, proxy, oracle)
         summary = plan.executor.summarize(raw)

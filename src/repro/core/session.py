@@ -127,13 +127,23 @@ class QuerySession:
     the target-DNN replica pool behind the broker before execution — results
     and accounting are identical at any replica count, only flush latency
     changes.
+
+    ``checkpoint`` makes the session preemptible: it is called between
+    ``slice_size``-id slices of every oracle interaction (prefetch flush and
+    execution alike) and may block — the serving scheduler parks a preempted
+    session there while higher-priority work runs.  Slicing never changes
+    which ids are requested, in what order, or on which account, so results
+    and fresh/cached accounting are byte-identical to an uncheckpointed run.
+    ``slice_size`` defaults to the engine's oracle microbatch size.
     """
 
     def __init__(self, engine: QueryEngine,
                  specs: Optional[Sequence[QuerySpec]] = None,
                  budget: Optional[int] = None, prefetch: bool = True,
                  n_strata: int = 10, seed: int = 0,
-                 oracle_replicas: Optional[int] = None):
+                 oracle_replicas: Optional[int] = None,
+                 checkpoint: Optional[Any] = None,
+                 slice_size: Optional[int] = None):
         self.engine = engine
         self.specs: List[QuerySpec] = list(specs or [])
         self.budget = budget
@@ -141,6 +151,9 @@ class QuerySession:
         self.n_strata = int(n_strata)
         self.seed = int(seed)
         self.oracle_replicas = oracle_replicas
+        self.checkpoint = checkpoint
+        self.slice_size = (int(slice_size) if slice_size
+                           else engine.max_oracle_batch)
 
     def add(self, spec: QuerySpec) -> "QuerySession":
         self.specs.append(spec)
@@ -262,7 +275,15 @@ class QuerySession:
             # account-based delta, not a broker.stats delta: a concurrent
             # session's flush in this window must not inflate our count
             fresh0 = sum(a.fresh for a in accounts)
-            broker.flush()
+            if self.checkpoint is None:
+                broker.flush()
+            else:
+                # preemptible prefetch: flush in slice-sized steps so the
+                # scheduler can run higher-priority work between them (per-id
+                # charging makes the step sequence byte-identical to a drain)
+                self.checkpoint()
+                while broker.flush(limit=self.slice_size):
+                    self.checkpoint()
             prefetch_fresh = sum(a.fresh for a in accounts) - fresh0
             # execute() only folds post-entry deltas into engine.stats, so
             # the prefetch phase records its labels here
@@ -273,7 +294,9 @@ class QuerySession:
 
         results: List[QueryResult] = []
         for i, plan in enumerate(sp.plans):
-            results.append(engine.execute(plan, account=accounts[i]))
+            results.append(engine.execute(plan, account=accounts[i],
+                                          checkpoint=self.checkpoint,
+                                          slice_size=self.slice_size))
         if engine.index.version != version0:
             sp.trace.append(
                 f"index version {version0} -> {engine.index.version} "

@@ -130,6 +130,24 @@ def main(argv=None) -> None:
                          "into one session")
     ap.add_argument("--max-workers", type=int, default=4,
                     help="concurrently executing sessions (all workloads)")
+    ap.add_argument("--share", action="append", default=None,
+                    metavar="NAME=WEIGHT",
+                    help="weighted fair share for a mounted workload "
+                         "(repeatable; default 1.0 each): among equally "
+                         "urgent waiting work the workload with the lowest "
+                         "active/share ratio runs next")
+    ap.add_argument("--workload-cap", action="append", default=None,
+                    metavar="NAME=N",
+                    help="hard cap on a workload's concurrently executing "
+                         "sessions (repeatable); a capped workload cannot "
+                         "monopolize the worker pool")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="never pause a running scan for higher-priority "
+                         "arrivals (default: preempt at oracle-slice "
+                         "boundaries)")
+    ap.add_argument("--preempt-slice", type=int, default=None,
+                    help="ids per preemption slice (default: each "
+                         "workload's oracle microbatch size)")
     ap.add_argument("--oracle-batch", type=int, default=64)
     ap.add_argument("--oracle-replicas", type=int, default=1,
                     help="target-DNN replica workers behind each workload's "
@@ -176,6 +194,25 @@ def main(argv=None) -> None:
         except KeyError as e:
             raise SystemExit(f"--default-workload: {e.args[0]}") from None
 
+    def parse_pairs(values, flag, cast):
+        out = {}
+        for value in values or []:
+            name, sep, raw = value.partition("=")
+            if not sep or not name:
+                raise SystemExit(f"{flag} takes NAME=VALUE, got {value!r}")
+            if name not in registry:
+                raise SystemExit(f"{flag} {value!r}: workload {name!r} is "
+                                 f"not mounted ({sorted(registry.names())})")
+            try:
+                out[name] = cast(raw)
+            except ValueError:
+                raise SystemExit(
+                    f"{flag} {value!r}: bad value {raw!r}") from None
+        return out
+
+    shares = parse_pairs(args.share, "--share", float)
+    caps = parse_pairs(args.workload_cap, "--workload-cap", int)
+
     lazy = multi and not args.preload
     if not lazy:
         # single-workload (and --preload) builds up front, exactly as
@@ -189,7 +226,10 @@ def main(argv=None) -> None:
 
     server = QueryServer(registry, host=args.host, port=args.port,
                          admission_window=args.admission_window,
-                         max_workers=args.max_workers).start()
+                         max_workers=args.max_workers,
+                         shares=shares, workload_caps=caps,
+                         preempt=not args.no_preempt,
+                         preempt_slice=args.preempt_slice).start()
     # per-workload oracle_replicas/records/store truth lives in describe()
     print(json.dumps({"serving": server.url,
                       "default_workload": registry.default,

@@ -1,0 +1,149 @@
+"""The open-loop firing engine and its latency report.
+
+:class:`OpenLoopGenerator` materializes an arrival schedule
+(:class:`~repro.loadgen.arrivals.ArrivalProcess`), samples a request per
+arrival (:class:`~repro.loadgen.mix.SpecMix`), and fires each one on its own
+thread at its scheduled time — *never* waiting for earlier requests to
+finish.  If the server falls behind, requests pile up in its queues (that is
+the point); the generator's own firing jitter is recorded separately so a
+slow harness cannot masquerade as a slow server.
+
+``post`` is any callable ``(specs, budget, priority, deadline_ms, name) ->
+object``; an exception marks the request failed and its message is kept.
+The report aggregates per class: counts, error counts, p50/p90/p99 latency.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.loadgen.arrivals import ArrivalProcess
+from repro.loadgen.mix import SpecMix
+
+PostFn = Callable[..., Any]
+
+
+@dataclass
+class RequestOutcome:
+    """One fired request, from schedule to completion."""
+    name: str                       # SpecClass name
+    scheduled_s: float              # offset in the arrival schedule
+    fired_s: float = 0.0            # when the thread actually posted
+    done_s: float = 0.0             # when the response (or error) landed
+    ok: bool = False
+    error: Optional[str] = None
+    response: Any = None
+
+    @property
+    def latency_s(self) -> float:
+        """Client-observed latency (post to response)."""
+        return self.done_s - self.fired_s
+
+    @property
+    def fire_lag_s(self) -> float:
+        """Harness jitter: how late the thread fired vs the schedule."""
+        return self.fired_s - self.scheduled_s
+
+
+def _percentiles(values_ms: List[float]) -> Dict[str, float]:
+    if not values_ms:
+        return {"p50_ms": 0.0, "p90_ms": 0.0, "p99_ms": 0.0}
+    arr = np.asarray(values_ms, np.float64)
+    p50, p90, p99 = np.percentile(arr, [50, 90, 99])
+    return {"p50_ms": round(float(p50), 3), "p90_ms": round(float(p90), 3),
+            "p99_ms": round(float(p99), 3)}
+
+
+@dataclass
+class LoadReport:
+    """Everything one open-loop run observed."""
+    duration_s: float
+    offered: int                              # scheduled arrivals
+    completed: int
+    errors: int
+    max_fire_lag_ms: float                    # harness health, not server's
+    classes: Dict[str, Dict[str, float]]      # per-class n/ok/errors/pXX_ms
+    outcomes: List[RequestOutcome] = field(repr=False, default_factory=list)
+
+
+class OpenLoopGenerator:
+    """Fire a :class:`SpecMix` at an :class:`ArrivalProcess` schedule.
+
+        gen = OpenLoopGenerator(post, mix, process, duration_s=3.0)
+        report = gen.run()
+
+    ``run`` blocks until every fired request has completed or errored (the
+    *firing* is open-loop; the run still ends cleanly).  Pre-sampling the
+    whole schedule before the first shot keeps sampling cost off the firing
+    path and makes the request train a pure function of the seeds.
+    """
+
+    def __init__(self, post: PostFn, mix: SpecMix, process: ArrivalProcess,
+                 duration_s: float):
+        if duration_s <= 0:
+            raise ValueError(f"duration_s must be > 0, got {duration_s}")
+        self.post = post
+        self.mix = mix
+        self.process = process
+        self.duration_s = float(duration_s)
+
+    def run(self) -> LoadReport:
+        offsets = self.process.times(self.duration_s)
+        plan = []
+        for off in offsets:
+            cls, specs, budget = self.mix.sample()
+            plan.append((off, cls, specs, budget))
+        outcomes = [RequestOutcome(name=cls.name, scheduled_s=off)
+                    for off, cls, _, _ in plan]
+        threads: List[threading.Thread] = []
+        t0 = time.monotonic()
+
+        def fire(i: int) -> None:
+            off, cls, specs, budget = plan[i]
+            out = outcomes[i]
+            delay = (t0 + off) - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            out.fired_s = time.monotonic() - t0
+            try:
+                out.response = self.post(specs, budget=budget,
+                                         priority=cls.priority,
+                                         deadline_ms=cls.deadline_ms,
+                                         name=cls.name)
+                out.ok = True
+            except Exception as e:  # noqa: BLE001 - outcome, not crash
+                out.error = f"{type(e).__name__}: {e}"
+            out.done_s = time.monotonic() - t0
+
+        for i in range(len(plan)):
+            t = threading.Thread(target=fire, args=(i,),
+                                 name=f"loadgen-{i}", daemon=True)
+            threads.append(t)
+            t.start()
+        for t in threads:
+            t.join()
+
+        classes: Dict[str, Dict[str, float]] = {}
+        for cls in self.mix.classes:
+            mine = [o for o in outcomes if o.name == cls.name]
+            ok = [o for o in mine if o.ok]
+            classes[cls.name] = {
+                "n": len(mine),
+                "ok": len(ok),
+                "errors": len(mine) - len(ok),
+                **_percentiles([o.latency_s * 1e3 for o in ok]),
+            }
+        return LoadReport(
+            duration_s=self.duration_s,
+            offered=len(plan),
+            completed=sum(o.ok for o in outcomes),
+            errors=sum(not o.ok for o in outcomes),
+            max_fire_lag_ms=round(max(
+                (o.fire_lag_s * 1e3 for o in outcomes), default=0.0), 3),
+            classes=classes,
+            outcomes=outcomes,
+        )

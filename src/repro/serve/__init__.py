@@ -7,21 +7,26 @@
   :class:`WorkloadSpec`, the mounting table that puts many workloads (each
   its own index + engine + store + oracle pool) behind one server, loaded
   lazily from a manifest;
+* :mod:`repro.serve.scheduler` — :class:`QueryScheduler`, the SLO-aware
+  waiting/running-queue scheduler (priority classes, EDF, weighted shares,
+  per-workload caps, preemption at oracle-slice boundaries);
 * :mod:`repro.serve.server` — :class:`QueryServer`, a stdlib
-  ``ThreadingHTTPServer`` that routes specs to workloads and coalesces
-  concurrent requests per workload into shared
-  :class:`~repro.core.session.QuerySession` s;
+  ``ThreadingHTTPServer`` that routes specs to workloads, schedules them
+  through the :class:`QueryScheduler`, and coalesces concurrent requests
+  per workload into shared :class:`~repro.core.session.QuerySession` s;
 * :mod:`repro.serve.client` — :class:`QueryClient` plus a small CLI.
 
 (The JSON wire form of a ``QueryResult`` is :mod:`repro.core.codec` — shared
 with the ``repro.launch.query`` CLI.)
 """
-__all__ = ["LabelStore", "QueryClient", "QueryServer", "WorkloadRegistry",
-           "WorkloadSpec"]
+__all__ = ["LabelStore", "QueryClient", "QueryScheduler", "QueryServer",
+           "ScheduledTask", "WorkloadRegistry", "WorkloadSpec"]
 
 _HOMES = {"LabelStore": "repro.serve.store",
           "QueryClient": "repro.serve.client",
+          "QueryScheduler": "repro.serve.scheduler",
           "QueryServer": "repro.serve.server",
+          "ScheduledTask": "repro.serve.scheduler",
           "WorkloadRegistry": "repro.serve.registry",
           "WorkloadSpec": "repro.serve.registry"}
 

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import random
 import sys
 import time
 import urllib.error
@@ -34,6 +35,24 @@ from typing import Any, Dict, List, Optional
 
 class ServerError(RuntimeError):
     """Non-2xx response from the query server (message = server's error)."""
+
+
+class ConnectRetriesExhausted(OSError):
+    """Connection kept being refused for the whole ``connect_wait`` window.
+
+    An ``OSError`` so existing ``except OSError`` connection handling (e.g.
+    :meth:`QueryClient.healthy`) keeps working; the message carries the
+    total time spent waiting and the attempt count, so a failed startup
+    race is distinguishable from a server that was never there.
+    """
+
+    def __init__(self, url: str, waited_s: float, attempts: int,
+                 cause: Exception):
+        super().__init__(
+            f"{url}: connection refused after {attempts} attempts over "
+            f"{waited_s:.2f}s of backoff; last error: {cause}")
+        self.waited_s = waited_s
+        self.attempts = attempts
 
 
 def _is_conn_refused(e: urllib.error.URLError) -> bool:
@@ -55,9 +74,12 @@ class QueryClient:
             self.url + path, data=data,
             headers={"Content-Type": "application/json"},
             method=method or ("POST" if data is not None else "GET"))
-        deadline = time.monotonic() + self.connect_wait
+        started = time.monotonic()
+        deadline = started + self.connect_wait
         backoff = 0.05
+        attempts = 0
         while True:
+            attempts += 1
             try:
                 with urllib.request.urlopen(req, timeout=self.timeout) as resp:
                     return json.loads(resp.read().decode())
@@ -69,30 +91,38 @@ class QueryClient:
                 raise ServerError(f"{path}: {detail}") from None
             except urllib.error.URLError as e:
                 # the server may simply not have bound its port yet: retry
-                # connection-refused with backoff instead of failing a race
-                # no client can win deterministically
-                if (retry_refused and _is_conn_refused(e)
-                        and time.monotonic() + backoff < deadline):
-                    time.sleep(backoff)
-                    backoff = min(backoff * 2, 1.0)
-                    continue
-                raise
+                # connection-refused with jittered exponential backoff (full
+                # jitter, so a fleet of clients racing one startup does not
+                # hammer the port in lockstep) instead of failing a race no
+                # client can win deterministically
+                if not (retry_refused and _is_conn_refused(e)):
+                    raise
+                sleep = backoff * random.uniform(0.5, 1.0)
+                if time.monotonic() + sleep >= deadline:
+                    raise ConnectRetriesExhausted(
+                        self.url + path, time.monotonic() - started,
+                        attempts, e) from None
+                time.sleep(sleep)
+                backoff = min(backoff * 2, 1.0)
 
     # -- api -----------------------------------------------------------------
     def query(self, specs: List[Any], budget: Optional[int] = None,
-              workload: Optional[str] = None) -> Dict[str, Any]:
+              workload: Optional[str] = None,
+              priority: Optional[int] = None,
+              deadline_ms: Optional[float] = None) -> Dict[str, Any]:
         """POST specs (dicts or ``QuerySpec`` s); returns the response JSON:
         ``results`` (per-spec rows), ``session``, and ``request`` totals.
         ``workload`` routes the whole request to one mounted workload
-        (specs may carry their own ``workload`` field instead)."""
+        (specs may carry their own ``workload`` field instead);
+        ``priority`` (0 = most urgent) and ``deadline_ms`` (relative to
+        arrival) place the request in the server's scheduling order."""
         raw = [s if isinstance(s, dict) else s.to_dict() for s in specs]
         body: Any = raw
-        if budget is not None or workload is not None:
-            body = {"specs": raw}
-            if budget is not None:
-                body["budget"] = budget
-            if workload is not None:
-                body["workload"] = workload
+        extras = {"budget": budget, "workload": workload,
+                  "priority": priority, "deadline_ms": deadline_ms}
+        extras = {k: v for k, v in extras.items() if v is not None}
+        if extras:
+            body = {"specs": raw, **extras}
         return self._call("/query", payload=body)
 
     def stats(self) -> Dict[str, Any]:
@@ -137,6 +167,12 @@ def main(argv=None) -> None:
     ap.add_argument("--workload", default=None,
                     help="mounted workload to route this request to "
                          "(default: the server's default workload)")
+    ap.add_argument("--priority", type=int, default=None,
+                    help="scheduling class for this request (0 = most "
+                         "urgent; default: the server's default class)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="soft latency target in ms; orders same-class "
+                         "requests earliest-deadline-first")
     ap.add_argument("--wait-ready", type=float, default=0.0,
                     help="poll /healthz for up to this many seconds first")
     ap.add_argument("--connect-wait", type=float, default=10.0,
@@ -167,7 +203,9 @@ def main(argv=None) -> None:
         specs.append(json.loads(s))
 
     if specs:
-        out = client.query(specs, budget=args.budget, workload=args.workload)
+        out = client.query(specs, budget=args.budget, workload=args.workload,
+                           priority=args.priority,
+                           deadline_ms=args.deadline_ms)
         print(json.dumps(out, indent=2))
         if args.expect_fresh is not None:
             got = out["request"]["fresh"]

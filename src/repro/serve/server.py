@@ -9,19 +9,19 @@ The system's first long-lived, multi-client layer.  Clients POST JSON
   pool; specs carry an optional ``workload`` field (or the request body a
   ``workload`` key) and default to the registry's default workload, so a
   single-workload server keeps today's API unchanged;
-* **coalesces per workload** — requests arriving within one *admission
-  window* are merged into a single shared
-  :class:`~repro.core.session.QuerySession`, so strangers' queries share
-  joint planning, the stratified sample, and one combined oracle flush (the
-  whole point of sessions, paper §4/§5).  Each workload has its own
-  admission lane: concurrent requests to the same workload still coalesce,
-  while different workloads admit and execute independently;
-* **runs sessions concurrently** — batches from every lane execute on ONE
-  shared worker pool, each against its workload's engine/broker, whose locks
-  make concurrent sessions produce results identical to isolated runs; with
-  per-workload ``oracle_replicas`` every session's flushes shard across that
-  workload's :class:`~repro.core.oracle_pool.OraclePool` of target-DNN
-  replicas;
+* **schedules** — every submission becomes a task in the
+  :class:`~repro.serve.scheduler.QueryScheduler`'s waiting queue, ordered
+  by priority class (``priority`` on specs or the request body, 0 = most
+  urgent) and earliest deadline first within a class (``deadline_ms``),
+  with per-workload weighted ``shares`` and hard ``caps`` on concurrent
+  slots.  Long scans execute in oracle-slice-sized chunks, so a
+  higher-class arrival preempts a running scan at its next slice boundary
+  — labels and accounting stay byte-identical to unscheduled runs;
+* **coalesces per workload** — with ``admission_window > 0``, unbudgeted
+  requests arriving within the window are merged into a single shared
+  :class:`~repro.core.session.QuerySession` at grant time, so strangers'
+  queries share joint planning, the stratified sample, and one combined
+  oracle flush (the whole point of sessions, paper §4/§5);
 * **persists per workload** — with a :class:`~repro.serve.store.LabelStore`
   attached, every flush is written through to disk, so a restarted server
   answers repeats on *every* mounted workload with zero fresh target-DNN
@@ -30,10 +30,12 @@ The system's first long-lived, multi-client layer.  Clients POST JSON
 Endpoints (all JSON):
 
 * ``POST /query`` — body is either a list of spec dicts or
-  ``{"specs": [...], "budget": int, "workload": str}``; responds with
-  per-spec result rows plus session- and request-level label accounting;
-* ``GET /stats`` — global server counters plus a per-workload ``workloads``
-  map (engine/broker stats, per-account fresh/cached counters, store and
+  ``{"specs": [...], "budget": int, "workload": str, "priority": int,
+  "deadline_ms": float}``; responds with per-spec result rows plus
+  session- and request-level label accounting;
+* ``GET /stats`` — global server counters, a ``scheduler`` section
+  (queues, slices, preemptions), plus a per-workload ``workloads`` map
+  (engine/broker stats, queue depth and wait-time counters, store and
   index info); the default workload's sections are mirrored at top level
   for single-workload compatibility;
 * ``GET /workloads`` — what is mounted: per workload name, default flag,
@@ -44,10 +46,8 @@ Endpoints (all JSON):
 from __future__ import annotations
 
 import json
-import queue
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Union
@@ -56,8 +56,7 @@ from repro.core.codec import result_row
 from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.session import QuerySession
 from repro.serve.registry import DEFAULT_WORKLOAD, WorkloadEntry, WorkloadRegistry
-
-_STOP = object()  # admission-queue sentinel
+from repro.serve.scheduler import DEFAULT_PRIORITY, QueryScheduler, ScheduledTask
 
 _WL_COUNTERS = ("requests", "specs", "sessions", "coalesced", "errors")
 
@@ -79,16 +78,6 @@ class _Submission:
     status: int = 200
 
 
-class _Lane:
-    """One workload's admission lane: a queue plus the thread batching it."""
-
-    def __init__(self, server: "QueryServer", workload: str):
-        self.queue: "queue.Queue" = queue.Queue()
-        self.thread = threading.Thread(
-            target=server._admission_loop, args=(workload, self.queue),
-            name=f"query-admit-{workload}", daemon=True)
-
-
 class QueryServer:
     """Serves ``QuerySpec`` lists over HTTP against mounted workloads.
 
@@ -103,18 +92,33 @@ class QueryServer:
     into a one-entry registry under the default workload name (``store``
     may only be passed in that form; registry entries carry their own).
 
-    ``admission_window`` (seconds) is how long the first arrival of a batch
-    waits for co-travelers *on the same workload*; ``max_workers`` caps
-    concurrently executing sessions across all workloads.  Submissions
-    carrying their own ``budget`` are never coalesced (a combined budget
-    across strangers has no owner to answer to).
+    ``admission_window`` (seconds) is how long an unbudgeted request stays
+    queued before it can run, during which co-travelers *on the same
+    workload and priority class* merge into its session; 0 disables
+    sharing.  ``max_workers`` caps concurrently executing sessions across
+    all workloads.  Submissions carrying their own ``budget`` are never
+    coalesced (a combined budget across strangers has no owner to answer
+    to).
+
+    Scheduling knobs: ``shares`` maps workload names to weighted-fair-share
+    weights (default 1.0 each), ``workload_caps`` to hard per-workload
+    concurrency caps; ``preempt`` lets strictly higher-class arrivals pause
+    running scans at oracle-slice boundaries (``preempt_slice`` ids per
+    slice, default: the workload engine's oracle microbatch size);
+    ``default_priority`` is the class assigned to requests that set none.
     """
 
     def __init__(self, source: Union[QueryEngine, WorkloadRegistry],
                  host: str = "127.0.0.1",
                  port: int = 0, admission_window: float = 0.05,
                  max_workers: int = 4, store=None,
-                 request_timeout: float = 600.0, session_kw: Optional[dict] = None):
+                 request_timeout: float = 600.0,
+                 session_kw: Optional[dict] = None,
+                 shares: Optional[Dict[str, float]] = None,
+                 workload_caps: Optional[Dict[str, int]] = None,
+                 preempt: bool = True,
+                 preempt_slice: Optional[int] = None,
+                 default_priority: int = DEFAULT_PRIORITY):
         if isinstance(source, WorkloadRegistry):
             if store is not None:
                 raise ValueError("store= only applies to the single-engine "
@@ -132,6 +136,11 @@ class QueryServer:
         self.max_workers = int(max_workers)
         self.request_timeout = float(request_timeout)
         self.session_kw = dict(session_kw or {})
+        self.shares = dict(shares or {})
+        self.workload_caps = dict(workload_caps or {})
+        self.preempt = bool(preempt)
+        self.preempt_slice = preempt_slice
+        self.default_priority = int(default_priority)
         self.stats: Dict[str, int] = {
             "requests": 0,     # POST /query submissions admitted
             "specs": 0,        # specs across all submissions
@@ -141,8 +150,7 @@ class QueryServer:
         }
         self._stats_lock = threading.Lock()
         self._wl_stats: Dict[str, Dict[str, int]] = {}
-        self._lanes: Dict[str, _Lane] = {}
-        self._pool: Optional[ThreadPoolExecutor] = None
+        self._scheduler: Optional[QueryScheduler] = None
         self._http: Optional[ThreadingHTTPServer] = None
         self._http_thread: Optional[threading.Thread] = None
         self._started = False
@@ -159,6 +167,11 @@ class QueryServer:
         """The default workload's label store (loads it if still lazy)."""
         return self.registry.get().store
 
+    @property
+    def scheduler(self) -> Optional[QueryScheduler]:
+        """The live scheduler (None before :meth:`start`)."""
+        return self._scheduler
+
     # -- lifecycle -----------------------------------------------------------
     @property
     def url(self) -> str:
@@ -169,9 +182,11 @@ class QueryServer:
             raise RuntimeError("server already started")
         self._started = True
         self._done.clear()   # a restarted server's wait() must block again
-        self._pool = ThreadPoolExecutor(
-            max_workers=self.max_workers,
-            thread_name_prefix="query-session")
+        self._scheduler = QueryScheduler(
+            load=self._load_entry, run=self._run_batch, fail=self._fail_task,
+            max_workers=self.max_workers, shares=self.shares,
+            caps=self.workload_caps, admission_window=self.admission_window,
+            preempt=self.preempt, preempt_slice=self.preempt_slice)
         server = self
 
         class Handler(_Handler):
@@ -186,31 +201,23 @@ class QueryServer:
         return self
 
     def shutdown(self) -> None:
-        """Stop accepting, drain in-flight sessions per workload, stop every
-        engine's replica pool, persist every store."""
+        """Stop accepting, shed the waiting queue (503), drain running and
+        paused sessions, stop every engine's replica pool, persist every
+        store."""
         with self._stats_lock:
             if not self._started:
                 return
             self._started = False
-            lanes = list(self._lanes.values())
-        for lane in lanes:
-            lane.queue.put(_STOP)
+            scheduler = self._scheduler
         if self._http is not None:
             self._http.shutdown()
             self._http.server_close()
-        # every admission lane must be DONE handing batches to the pool
-        # before the pool stops accepting, or an admitted batch dies on
-        # submit() with its clients left waiting
         if self._http_thread is not None:
             self._http_thread.join(timeout=30.0)
-        for lane in lanes:
-            lane.thread.join(timeout=30.0)
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-        # the lane threads above have exited: drop them so a restarted
-        # server spawns fresh lanes instead of enqueueing onto dead queues
-        with self._stats_lock:
-            self._lanes.clear()
+        # the scheduler fails every waiting task fast and drains running and
+        # paused sessions to completion before the registry sweep below
+        if scheduler is not None:
+            scheduler.shutdown(wait=True)
         # sessions are drained: per workload, stop the engine's target-DNN
         # replica pool and save the label store
         self.registry.close()
@@ -256,15 +263,52 @@ class QueryServer:
                 f"{sorted(self.registry.names())}")
         return name
 
+    def _resolve_priority(self, specs: List[QuerySpec],
+                          priority: Optional[int]) -> int:
+        """The submission's class: the most urgent (minimum) of the
+        request-level value and any spec-level values; the server default
+        when none is set."""
+        values = []
+        for v in [priority] + [s.priority for s in specs]:
+            if v is None:
+                continue
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                raise ValueError(f"priority must be a non-negative integer, "
+                                 f"got {v!r}")
+            values.append(v)
+        return min(values) if values else self.default_priority
+
+    @staticmethod
+    def _resolve_deadline(specs: List[QuerySpec],
+                          deadline_ms: Optional[float]) -> Optional[float]:
+        """The submission's EDF key: the tightest deadline named by the
+        request or any spec, in milliseconds relative to arrival."""
+        values = []
+        for v in [deadline_ms] + [s.deadline_ms for s in specs]:
+            if v is None:
+                continue
+            v = float(v)
+            if v <= 0:
+                raise ValueError(f"deadline_ms must be > 0, got {v}")
+            values.append(v)
+        return min(values) if values else None
+
     def submit(self, specs: List[QuerySpec], budget: Optional[int] = None,
-               workload: Optional[str] = None) -> _Submission:
-        """Enqueue one submission for its workload's admission lane
-        (HTTP-free entry point; the handler and in-process tests both use
-        it).  Raises :class:`UnknownWorkload` for unmounted names and
-        ``RuntimeError`` once shutdown has begun — callers must not be left
-        waiting on a submission no lane will ever pick up."""
+               workload: Optional[str] = None,
+               priority: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> _Submission:
+        """Enqueue one submission with the scheduler (HTTP-free entry point;
+        the handler and in-process tests both use it).  Raises
+        :class:`UnknownWorkload` for unmounted names, ``ValueError`` for
+        bad priority/deadline values, and ``RuntimeError`` once shutdown
+        has begun — callers must not be left waiting on a submission no
+        scheduler will ever pick up."""
         name = self._resolve_workload(specs, workload)
+        prio = self._resolve_priority(specs, priority)
+        deadline_rel = self._resolve_deadline(specs, deadline_ms)
         sub = _Submission(specs=specs, budget=budget, workload=name)
+        task = ScheduledTask(workload=name, submissions=[sub], priority=prio,
+                             budget=budget)
         with self._stats_lock:
             if not self._started:
                 raise RuntimeError("server is shutting down")
@@ -274,74 +318,21 @@ class QueryServer:
                                            dict.fromkeys(_WL_COUNTERS, 0))
             ws["requests"] += 1
             ws["specs"] += len(specs)
-            lane = self._lanes.get(name)
-            if lane is None:
-                lane = self._lanes[name] = _Lane(self, name)
-                lane.thread.start()
-            # under the same lock shutdown() flips _started: either this
-            # submission is enqueued before _STOP, or submit() raises
-            lane.queue.put(sub)
+            scheduler = self._scheduler
+        # the relative deadline becomes absolute against the same monotonic
+        # clock the scheduler orders by
+        if deadline_rel is not None:
+            task.deadline = time.monotonic() + deadline_rel / 1e3
+        scheduler.submit(task)
         return sub
 
-    def _admission_loop(self, workload: str, q: "queue.Queue") -> None:
-        while True:
-            sub = q.get()
-            if sub is _STOP:
-                self._drain_on_stop(q)
-                return
-            batch = [sub]
-            if sub.budget is None and self.admission_window > 0:
-                deadline = time.monotonic() + self.admission_window
-                while True:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        break
-                    try:
-                        nxt = q.get(timeout=remaining)
-                    except queue.Empty:
-                        break
-                    if nxt is _STOP:
-                        q.put(_STOP)  # handled next iteration
-                        break
-                    if nxt.budget is not None:
-                        # budgeted submissions run alone (their cap is theirs)
-                        self._dispatch(workload, [nxt])
-                    else:
-                        batch.append(nxt)
-            self._dispatch(workload, batch)
+    # -- scheduler callbacks -------------------------------------------------
+    def _load_entry(self, task: ScheduledTask) -> WorkloadEntry:
+        return self.registry.get(task.workload)
 
-    def _dispatch(self, workload: str, batch: List[_Submission]) -> None:
-        try:
-            # lazy workloads pay their index build/load HERE, on their own
-            # admission lane: a cold workload's build delays only its own
-            # lane, never a worker-pool slot another workload's sessions
-            # need (and a memoized failed load fails every later batch fast)
-            entry = self.registry.get(workload)
-        except Exception as e:  # noqa: BLE001 - mount faults are OURS
-            self._fail_batch(workload, batch, e, 500)
-            return
-        try:
-            self._pool.submit(self._run_batch, workload, entry, batch)
-        except RuntimeError:  # pool already shut down: fail, don't strand
-            for sub in batch:
-                sub.error = "server is shutting down"
-                sub.status = 503
-                sub.done.set()
-
-    @staticmethod
-    def _drain_on_stop(q: "queue.Queue") -> None:
-        """Fail any submission that raced in behind the _STOP sentinel
-        instead of leaving its client blocked until request_timeout."""
-        while True:
-            try:
-                sub = q.get_nowait()
-            except queue.Empty:
-                return
-            if sub is _STOP:
-                continue
-            sub.error = "server is shutting down"
-            sub.status = 503
-            sub.done.set()
+    def _fail_task(self, task: ScheduledTask, e: Exception,
+                   status: int) -> None:
+        self._fail_batch(task.workload, task.submissions, e, status)
 
     # -- execution -----------------------------------------------------------
     def _bump(self, workload: str, **deltas: int) -> None:
@@ -360,12 +351,19 @@ class QueryServer:
             sub.status = status
             sub.done.set()
 
-    def _run_batch(self, workload: str, entry: WorkloadEntry,
-                   batch: List[_Submission]) -> None:
+    def _run_batch(self, task: ScheduledTask, entry: WorkloadEntry) -> None:
+        workload, batch = task.workload, task.submissions
         specs = [s for sub in batch for s in sub.specs]
         budget = batch[0].budget if len(batch) == 1 else None
-        session = QuerySession(entry.engine, specs, budget=budget,
-                               **self.session_kw)
+        scheduler = self._scheduler
+        kw = dict(self.session_kw)
+        if scheduler is not None:
+            # the preemption contract: the session yields to the scheduler
+            # between oracle slices; the scheduler may park it there
+            kw.setdefault("checkpoint", lambda: scheduler.checkpoint(task))
+            if scheduler.preempt_slice is not None:
+                kw.setdefault("slice_size", scheduler.preempt_slice)
+        session = QuerySession(entry.engine, specs, budget=budget, **kw)
         try:
             # plan separately first: it spends no oracle budget, and its
             # failures (malformed knobs, bad score names, impossible
@@ -382,6 +380,11 @@ class QueryServer:
         rows = [result_row(r, workload=workload) for r in out.results]
         session = {**out.stats,
                    "workload": workload,
+                   "priority": task.priority,
+                   "queue_wait_s": round(
+                       (task.first_grant_at or task.enqueued_at)
+                       - task.enqueued_at, 6),
+                   "preemptions": task.preemptions,
                    "coalesced_requests": len(batch),
                    "coalesced_specs": len(specs)}
         pos = 0
@@ -428,11 +431,15 @@ class QueryServer:
         with self._stats_lock:
             server_stats = dict(self.stats)
             wl_stats = {k: dict(v) for k, v in self._wl_stats.items()}
+            scheduler = self._scheduler
+        sched_snap = scheduler.snapshot() if scheduler is not None else {}
+        sched_wl = sched_snap.pop("workloads", {})
         payload: Dict[str, Any] = {
             "server": {**server_stats,
                        "admission_window_s": self.admission_window,
                        "max_workers": self.max_workers,
-                       "default_workload": default},
+                       "default_workload": default,
+                       "scheduler": sched_snap},
             "workloads": {},
         }
         for entry in self.registry.entries():
@@ -441,6 +448,11 @@ class QueryServer:
                 wp.update(self._entry_payload(entry))
             wp["server"] = wl_stats.get(entry.name,
                                         dict.fromkeys(_WL_COUNTERS, 0))
+            # per-workload queue observability: depth + wait-time counters
+            wp["queue"] = sched_wl.get(entry.name, {
+                "depth": 0, "active": 0, "share": 1.0, "cap": None,
+                "admitted": 0, "merged": 0, "preempted": 0,
+                "wait_mean_s": 0.0, "wait_max_s": 0.0})
             payload["workloads"][entry.name] = wp
         # single-workload compatibility: the default workload's sections are
         # mirrored at top level (exactly the pre-registry payload shape) —
@@ -449,7 +461,7 @@ class QueryServer:
         mirror = payload["workloads"].get(default)
         if mirror is not None and mirror["loaded"]:
             payload.update({k: v for k, v in mirror.items()
-                            if k not in ("loaded", "server")})
+                            if k not in ("loaded", "server", "queue")})
         return payload
 
     def workloads_payload(self) -> Dict[str, Any]:
@@ -510,17 +522,20 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             length = int(self.headers.get("Content-Length", 0))
             body = json.loads(self.rfile.read(length) or b"null")
-            workload = None
+            workload = priority = deadline_ms = None
             if isinstance(body, list):
                 raw_specs, budget = body, None
             elif isinstance(body, dict):
                 raw_specs = body.get("specs")
                 budget = body.get("budget")
                 workload = body.get("workload")
+                priority = body.get("priority")
+                deadline_ms = body.get("deadline_ms")
             else:
                 raise ValueError(
                     "body must be a JSON list of specs or {'specs': [...], "
-                    "'budget': int, 'workload': str}")
+                    "'budget': int, 'workload': str, 'priority': int, "
+                    "'deadline_ms': float}")
             if not raw_specs:
                 raise ValueError("no specs in request")
             specs = [QuerySpec.from_dict(d) for d in raw_specs]
@@ -528,8 +543,10 @@ class _Handler(BaseHTTPRequestHandler):
             self._reply(400, {"error": f"{type(e).__name__}: {e}"})
             return
         try:
-            sub = self.owner.submit(specs, budget=budget, workload=workload)
-        except ValueError as e:  # unknown or inconsistent workload routing
+            sub = self.owner.submit(specs, budget=budget, workload=workload,
+                                    priority=priority,
+                                    deadline_ms=deadline_ms)
+        except ValueError as e:  # unknown workload / bad priority or deadline
             self._reply(400, {"error": str(e)})
             return
         except RuntimeError as e:

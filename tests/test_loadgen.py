@@ -1,0 +1,176 @@
+"""Open-loop load harness tests: arrival processes (rate, burstiness,
+reproducibility), spec mixes (weights, budget distributions, template
+isolation), and the generator's open-loop firing + per-class report."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.loadgen import (
+    ArrivalProcess,
+    OpenLoopGenerator,
+    SpecClass,
+    SpecMix,
+)
+
+pytestmark = pytest.mark.tier1
+
+
+# -- arrivals --------------------------------------------------------------
+def test_poisson_arrivals_hit_the_rate_and_stay_sorted():
+    times = ArrivalProcess(rate=100.0, cv=1.0, seed=0).times(20.0)
+    assert times == sorted(times)
+    assert all(0 <= t < 20.0 for t in times)
+    # mean rate within 10% over 2000 expected arrivals
+    assert len(times) == pytest.approx(2000, rel=0.1)
+    gaps = np.diff(times)
+    assert gaps.std() / gaps.mean() == pytest.approx(1.0, abs=0.15)
+
+
+def test_cv_controls_burstiness():
+    regular = ArrivalProcess(rate=50.0, cv=0.2, seed=1).times(20.0)
+    bursty = ArrivalProcess(rate=50.0, cv=3.0, seed=1).times(20.0)
+    cv_of = lambda ts: np.diff(ts).std() / np.diff(ts).mean()  # noqa: E731
+    assert cv_of(regular) < 0.4 < 2.0 < cv_of(bursty)
+    # both still hit the same mean rate
+    assert len(regular) == pytest.approx(1000, rel=0.15)
+    assert len(bursty) == pytest.approx(1000, rel=0.25)
+
+
+def test_arrivals_are_reproducible_and_validated():
+    a = ArrivalProcess(rate=10.0, seed=7).times(5.0)
+    b = ArrivalProcess(rate=10.0, seed=7).times(5.0)
+    assert a == b
+    assert ArrivalProcess(rate=10.0, seed=8).times(5.0) != a
+    assert ArrivalProcess(rate=10.0).times(0.0) == []
+    with pytest.raises(ValueError, match="rate"):
+        ArrivalProcess(rate=0.0)
+    with pytest.raises(ValueError, match="cv"):
+        ArrivalProcess(rate=1.0, cv=0.0)
+
+
+# -- mixes -----------------------------------------------------------------
+def test_mix_samples_by_weight():
+    mix = SpecMix([SpecClass("common", [{"kind": "a"}], weight=9.0),
+                   SpecClass("rare", [{"kind": "b"}], weight=1.0)], seed=0)
+    names = [mix.sample()[0].name for _ in range(1000)]
+    assert names.count("common") == pytest.approx(900, rel=0.1)
+
+
+def test_mix_budget_distributions():
+    fixed = SpecClass("f", [{"kind": "a"}], budget=50)
+    ranged = SpecClass("r", [{"kind": "a"}], budget=(10, 20))
+    fn = SpecClass("c", [{"kind": "a"}],
+                   budget=lambda rng: int(rng.integers(1, 3)))
+    unbudgeted = SpecClass("u", [{"kind": "a"}])
+    rng = np.random.default_rng(0)
+    assert fixed.sample_budget(rng) == 50
+    assert all(10 <= ranged.sample_budget(rng) <= 20 for _ in range(50))
+    assert fn.sample_budget(rng) in (1, 2)
+    assert unbudgeted.sample_budget(rng) is None
+
+
+def test_mix_spec_templates_are_copied_per_sample():
+    cls = SpecClass("t", [{"kind": "a", "seed": 0}])
+    mix = SpecMix([cls], seed=0)
+    _, specs, _ = mix.sample()
+    specs[0]["seed"] = 999                  # caller mutates its copy
+    assert mix.sample()[1][0]["seed"] == 0  # template untouched
+
+
+def test_mix_validation():
+    with pytest.raises(ValueError, match="weight"):
+        SpecClass("bad", [{"kind": "a"}], weight=0.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        SpecMix([SpecClass("x", [{"kind": "a"}]),
+                 SpecClass("x", [{"kind": "b"}])])
+    with pytest.raises(ValueError, match="at least one"):
+        SpecMix([])
+
+
+# -- generator -------------------------------------------------------------
+def _mix_one(name="cls", **kw):
+    return SpecMix([SpecClass(name, [{"kind": "agg"}], **kw)], seed=0)
+
+
+def test_generator_reports_per_class_latencies():
+    def post(specs, budget=None, priority=None, deadline_ms=None, name=None):
+        time.sleep(0.01)
+        return {"ok": True}
+
+    report = OpenLoopGenerator(post, _mix_one(priority=0, deadline_ms=99.0),
+                               ArrivalProcess(rate=40.0, seed=0), 1.0).run()
+    assert report.offered > 10
+    assert report.completed == report.offered and report.errors == 0
+    cls = report.classes["cls"]
+    assert cls["n"] == report.offered and cls["errors"] == 0
+    assert 5.0 <= cls["p50_ms"] <= cls["p90_ms"] <= cls["p99_ms"] <= 500.0
+    # the harness observed its own firing jitter
+    assert report.max_fire_lag_ms >= 0.0
+
+
+def test_generator_is_open_loop():
+    """A stalled server must not slow the offered load: later requests
+    fire on schedule while early ones are still blocked."""
+    fired = []
+    gate = threading.Event()
+
+    def post(specs, budget=None, priority=None, deadline_ms=None, name=None):
+        fired.append(time.monotonic())
+        gate.wait(5.0)          # every request blocks until the end
+        return {}
+
+    t0 = time.monotonic()
+    done = {}
+
+    def run():
+        done["report"] = OpenLoopGenerator(
+            post, _mix_one(), ArrivalProcess(rate=20.0, seed=0), 1.0).run()
+
+    runner = threading.Thread(target=run, daemon=True)
+    runner.start()
+    time.sleep(1.3)
+    n_fired_during_window = len(fired)
+    gate.set()
+    runner.join(10.0)
+    report = done["report"]
+    # all arrivals fired during the window despite zero completions
+    assert n_fired_during_window == report.offered > 10
+    assert (max(o.fire_lag_s for o in report.outcomes)
+            < 0.5), "firing fell behind schedule"
+    assert time.monotonic() - t0 < 10.0
+
+
+def test_generator_counts_errors_per_class():
+    def post(specs, budget=None, priority=None, deadline_ms=None, name=None):
+        if name == "bad":
+            raise RuntimeError("boom")
+        return {}
+
+    mix = SpecMix([SpecClass("good", [{"kind": "a"}], weight=1.0),
+                   SpecClass("bad", [{"kind": "b"}], weight=1.0)], seed=0)
+    report = OpenLoopGenerator(post, mix,
+                               ArrivalProcess(rate=30.0, seed=0), 1.0).run()
+    assert report.classes["bad"]["errors"] == report.classes["bad"]["n"] > 0
+    assert report.classes["good"]["errors"] == 0
+    assert report.errors == report.classes["bad"]["n"]
+    bad = [o for o in report.outcomes if o.name == "bad"]
+    assert all("RuntimeError: boom" == o.error for o in bad)
+
+
+def test_generator_passes_class_envelope_to_post():
+    seen = []
+
+    def post(specs, budget=None, priority=None, deadline_ms=None, name=None):
+        seen.append((specs, budget, priority, deadline_ms, name))
+        return {}
+
+    mix = SpecMix([SpecClass("c", [{"kind": "a"}], priority=0,
+                             deadline_ms=150.0, budget=(5, 9))], seed=0)
+    OpenLoopGenerator(post, mix, ArrivalProcess(rate=30.0, seed=0), 0.5).run()
+    assert seen
+    for specs, budget, priority, deadline_ms, name in seen:
+        assert specs == [{"kind": "a"}]
+        assert 5 <= budget <= 9
+        assert priority == 0 and deadline_ms == 150.0 and name == "c"

@@ -1,0 +1,463 @@
+"""SLO-aware scheduler tests: queue ordering (priority classes, EDF,
+weighted shares, per-workload caps), grant-time coalescing semantics,
+preemption at checkpoints with byte-identical oracle accounting, shutdown
+shedding, scheduler/queue observability at /stats, the QuerySpec scheduling
+fields' JSON roundtrip, and WorkloadRegistry close() under concurrency."""
+import threading
+import time
+
+import pytest
+
+from repro.core.engine import QueryEngine, QuerySpec
+from repro.core.index import TastiIndex
+from repro.core.schema import make_workload
+from repro.core.session import QuerySession
+from repro.serve import QueryClient, QueryScheduler, QueryServer, ScheduledTask
+from repro.serve.registry import WorkloadEntry, WorkloadRegistry
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return make_workload("night-street", n_frames=1200)
+
+
+@pytest.fixture(scope="module")
+def index(wl):
+    return TastiIndex.build(wl.features, 120, wl.target_dnn_batch, k=4,
+                            random_fraction=0.0, seed=0)
+
+
+# -- unit-level scheduler harness ------------------------------------------
+class _Sub:
+    """Stands in for the server's _Submission (the scheduler only needs
+    ``done``)."""
+
+    def __init__(self):
+        self.done = threading.Event()
+
+
+def _mark_done(task):
+    for sub in task.submissions:
+        sub.done.set()
+
+
+def _make(run_fn, **kw):
+    """A scheduler whose run callback is the test's; failures recorded."""
+    fails = []
+    sched = QueryScheduler(
+        load=lambda t: "entry",
+        run=lambda t, e: (run_fn(t), _mark_done(t)),
+        fail=lambda t, e, status: (fails.append((t, status)), _mark_done(t)),
+        **kw)
+    return sched, fails
+
+
+def _wait_all(tasks, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    for t in tasks:
+        for sub in t.submissions:
+            assert sub.done.wait(max(0.01, deadline - time.monotonic())), \
+                "task never completed"
+
+
+def _blocked_scheduler(order, release, **kw):
+    """A 1-or-2-slot scheduler with a blocker task holding a slot until
+    ``release`` is set; returns (sched, fails, blocker)."""
+    running = threading.Event()
+
+    def run(task):
+        label = task.submissions[0].label
+        if label == "blocker":
+            running.set()
+            assert release.wait(10.0)
+        order.append(label)
+
+    sched, fails = _make(run, **kw)
+    blocker = _task("blocker")
+    sched.submit(blocker)
+    assert running.wait(5.0)
+    return sched, fails, blocker
+
+
+def _task(label, workload="w", priority=1, deadline=None, budget=None):
+    sub = _Sub()
+    sub.label = label
+    return ScheduledTask(workload=workload, submissions=[sub],
+                         priority=priority, deadline=deadline, budget=budget)
+
+
+def test_priority_classes_order_grants():
+    """With the only slot held, a later-arriving urgent task outruns an
+    earlier relaxed one."""
+    order, release = [], threading.Event()
+    sched, fails, blocker = _blocked_scheduler(
+        order, release, max_workers=1, preempt=False)
+    low = _task("low", priority=2)
+    high = _task("high", priority=0)
+    sched.submit(low)
+    time.sleep(0.05)  # low is waiting first (smaller seq)
+    sched.submit(high)
+    time.sleep(0.05)
+    release.set()
+    _wait_all([blocker, low, high])
+    assert order == ["blocker", "high", "low"]
+    assert not fails
+    sched.shutdown()
+
+
+def test_edf_orders_within_a_class():
+    """Same class: the tighter deadline runs first, no-deadline runs last,
+    regardless of arrival order."""
+    order, release = [], threading.Event()
+    sched, fails, blocker = _blocked_scheduler(
+        order, release, max_workers=1, preempt=False)
+    now = time.monotonic()
+    none = _task("no-deadline")
+    late = _task("late", deadline=now + 60.0)
+    soon = _task("soon", deadline=now + 1.0)
+    for t in (none, late, soon):
+        sched.submit(t)
+        time.sleep(0.02)
+    release.set()
+    _wait_all([blocker, none, late, soon])
+    assert order == ["blocker", "soon", "late", "no-deadline"]
+    assert not fails
+    sched.shutdown()
+
+
+def test_workload_cap_blocks_even_with_free_slots():
+    """A capped workload leaves the second slot to another workload even
+    when its own task arrived first."""
+    order, release = [], threading.Event()
+    sched, fails, blocker = _blocked_scheduler(
+        order, release, max_workers=2, preempt=False, caps={"w": 1})
+    capped = _task("capped", workload="w")      # w at cap: blocker holds it
+    other = _task("other", workload="v")
+    sched.submit(capped)
+    time.sleep(0.05)
+    sched.submit(other)
+    _wait_all([other])                          # runs on the free slot
+    assert order == ["other"]                   # capped still waiting
+    release.set()
+    _wait_all([blocker, capped])
+    assert order == ["other", "blocker", "capped"]
+    assert not fails
+    sched.shutdown()
+
+
+@pytest.mark.parametrize("shares,winner", [
+    (None, "a2"),           # equal shares, equal underservice: seq decides
+    ({"b": 8.0}, "b2"),     # b's weight makes it the underserved workload
+])
+def test_weighted_shares_pick_the_underserved_workload(shares, winner):
+    """Workloads a, b, c each hold one of three slots while a2 and b2 wait;
+    freeing c's slot grants it to the workload with the smaller
+    active/share ratio."""
+    order = []
+    release_ab = threading.Event()
+    release_c = threading.Event()
+    running = {"a": threading.Event(), "b": threading.Event(),
+               "c": threading.Event()}
+
+    def run(task):
+        label = task.submissions[0].label
+        if label.startswith("blocker"):
+            running[task.workload].set()
+            gate = release_c if task.workload == "c" else release_ab
+            assert gate.wait(10.0)
+        order.append(label)
+
+    sched, fails = _make(run, max_workers=3, preempt=False, shares=shares)
+    blockers = [_task("blocker-a", workload="a"),
+                _task("blocker-b", workload="b"),
+                _task("blocker-c", workload="c")]
+    for t in blockers:
+        sched.submit(t)
+    assert all(running[w].wait(5.0) for w in "abc")
+    a2 = _task("a2", workload="a")
+    b2 = _task("b2", workload="b")
+    sched.submit(a2)            # a2 first by seq; both ratios are 1/share
+    sched.submit(b2)
+    time.sleep(0.1)
+    assert order == []          # all slots held, both candidates queued
+    release_c.set()             # one slot frees; scheduler picks the winner
+    _wait_all([a2, b2])
+    candidates = [x for x in order if not x.startswith("blocker")]
+    assert candidates[0] == winner
+    release_ab.set()
+    _wait_all(blockers)
+    assert not fails
+    sched.shutdown()
+
+
+def test_preemption_pauses_scan_at_checkpoint_and_resumes():
+    """A running low-class task yields its slot at a checkpoint to a
+    higher class, then finishes after it."""
+    order = []
+    high_done = threading.Event()
+    sched_box = {}
+
+    def run(task):
+        label = task.submissions[0].label
+        if label == "heavy":
+            for _ in range(400):
+                sched_box["sched"].checkpoint(task)
+                if high_done.is_set():
+                    break
+                time.sleep(0.005)
+        else:
+            high_done.set()
+        order.append(label)
+
+    sched, fails = _make(run, max_workers=1, preempt=True)
+    sched_box["sched"] = sched
+    heavy = _task("heavy", priority=2)
+    sched.submit(heavy)
+    deadline = time.monotonic() + 5.0
+    while not sched.stats["slices"] and time.monotonic() < deadline:
+        time.sleep(0.01)  # heavy is mid-scan before the urgent arrival
+    high = _task("high", priority=0)
+    sched.submit(high)
+    _wait_all([heavy, high])
+    assert order == ["high", "heavy"]
+    assert heavy.preemptions >= 1
+    assert sched.stats["preemptions"] >= 1
+    assert not fails
+    sched.shutdown()
+
+
+def test_admission_window_merges_only_unbudgeted_same_class():
+    """window>0: unbudgeted same-class strangers share one run; a budgeted
+    task and a different-class task never merge."""
+    runs = []
+
+    def run(task):
+        runs.append([s.label for s in task.submissions])
+
+    sched, fails = _make(run, max_workers=1, admission_window=0.15)
+    tasks = [_task("u1"), _task("u2"),
+             _task("budgeted", budget=50), _task("urgent", priority=0)]
+    for t in tasks:
+        sched.submit(t)
+    _wait_all(tasks)
+    merged = next(r for r in runs if "u1" in r)
+    assert sorted(merged) == ["u1", "u2"]          # strangers merged...
+    assert ["budgeted"] in runs                    # ...budgeted alone...
+    assert ["urgent"] in runs                      # ...other class alone
+    assert sched.stats["merged"] == 1
+    assert not fails
+    sched.shutdown()
+
+
+def test_window_zero_never_merges():
+    runs = []
+    sched, fails = _make(
+        lambda t: runs.append([s.label for s in t.submissions]),
+        max_workers=1, admission_window=0.0)
+    tasks = [_task("u1"), _task("u2"), _task("u3")]
+    for t in tasks:
+        sched.submit(t)
+    _wait_all(tasks)
+    assert sorted(map(tuple, runs)) == [("u1",), ("u2",), ("u3",)]
+    assert sched.stats["merged"] == 0
+    assert not fails
+    sched.shutdown()
+
+
+def test_shutdown_sheds_waiting_and_drains_running():
+    """Waiting tasks fail fast with 503; the running task finishes."""
+    order, release = [], threading.Event()
+    sched, fails, blocker = _blocked_scheduler(
+        order, release, max_workers=1, preempt=False)
+    waiter = _task("waiter")
+    sched.submit(waiter)
+    time.sleep(0.05)
+    shutdown_done = threading.Event()
+    threading.Thread(
+        target=lambda: (sched.shutdown(), shutdown_done.set()),
+        daemon=True).start()
+    time.sleep(0.1)
+    release.set()
+    assert shutdown_done.wait(10.0)
+    _wait_all([blocker, waiter])
+    assert order == ["blocker"]
+    assert [status for _, status in fails] == [503]
+    assert sched.stats["shed"] == 1
+
+
+# -- engine-level slicing parity -------------------------------------------
+def test_sliced_oracle_execution_is_byte_identical(wl, index):
+    """checkpoint+slice_size chunks every fetch, yet ids, labels, and
+    fresh/cached accounting match unsliced execution exactly."""
+    specs = [QuerySpec(kind="aggregation", score="score_count", err=0.2),
+             QuerySpec(kind="limit", score="score_has_object", k_results=4),
+             QuerySpec(kind="selection", score="score_has_object",
+                       budget=80)]
+    plain_eng = QueryEngine(index, wl)
+    plain = QuerySession(plain_eng, specs).execute()
+
+    beats = []
+    sliced_eng = QueryEngine(index, wl)
+    sliced = QuerySession(sliced_eng, specs,
+                          checkpoint=lambda: beats.append(1),
+                          slice_size=7).execute()
+    assert len(beats) > 0
+    assert (plain_eng.broker.snapshot()["fresh"]
+            == sliced_eng.broker.snapshot()["fresh"])
+    for a, b in zip(plain.results, sliced.results):
+        assert a.estimate == b.estimate
+        assert a.n_invocations == b.n_invocations
+        assert a.n_oracle_fresh == b.n_oracle_fresh
+        assert a.n_oracle_cached == b.n_oracle_cached
+        if a.selected is not None:
+            assert list(a.selected) == list(b.selected)
+
+
+# -- server integration ----------------------------------------------------
+def test_spec_scheduling_fields_roundtrip_and_echo():
+    spec = QuerySpec(kind="aggregation", score="score_count",
+                     priority=0, deadline_ms=150.0)
+    d = spec.to_dict()
+    assert d["priority"] == 0 and d["deadline_ms"] == 150.0
+    back = QuerySpec.from_dict(d)
+    assert back.priority == 0 and back.deadline_ms == 150.0
+    # unset fields stay off the wire (pre-scheduler payloads unchanged)
+    assert "priority" not in QuerySpec(kind="aggregation",
+                                       score="score_count").to_dict()
+
+
+def test_server_schedules_by_priority_and_reports_queue_stats(wl, index):
+    server = QueryServer(QueryEngine(index, wl), port=0,
+                         admission_window=0.0, max_workers=1).start()
+    try:
+        client = QueryClient(server.url)
+        client.wait_ready(30)
+        out = client.query(
+            [{"kind": "aggregation", "score": "score_count", "err": 0.2,
+              "priority": 0, "deadline_ms": 200.0}])
+        row = out["results"][0]
+        assert row["priority"] == 0 and row["deadline_ms"] == 200.0
+        assert out["session"]["priority"] == 0
+        assert out["session"]["queue_wait_s"] >= 0.0
+        assert out["session"]["preemptions"] == 0
+
+        stats = client.stats()
+        sched = stats["server"]["scheduler"]
+        assert sched["granted"] >= 1 and sched["max_workers"] == 1
+        queue = stats["workloads"][stats["server"]["default_workload"]][
+            "queue"]
+        assert queue["admitted"] >= 1
+        assert queue["wait_mean_s"] >= 0.0
+        assert queue["wait_max_s"] >= queue["wait_mean_s"] >= 0.0
+        assert queue["depth"] == 0 and queue["active"] == 0
+
+        with pytest.raises(Exception, match="priority"):
+            client.query([{"kind": "aggregation", "score": "score_count"}],
+                         priority=-1)
+        with pytest.raises(Exception, match="deadline_ms"):
+            client.query([{"kind": "aggregation", "score": "score_count"}],
+                         deadline_ms=0)
+    finally:
+        server.shutdown()
+
+
+def test_server_preempts_heavy_scan_with_accounting_parity(wl, index):
+    """End-to-end: an urgent request overtakes a long limit scan on a
+    1-worker server, and total accounting matches a serial replay."""
+    class Sleepy:
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def target_dnn_batch(self, ids):
+            time.sleep(0.004 + 0.0005 * len(ids))
+            return self._inner.target_dnn_batch(ids)
+
+    heavy_spec = {"kind": "limit", "score": "score_has_object", "batch": 32,
+                  "k_results": 900, "max_invocations": 900, "priority": 2}
+    urgent_spec = {"kind": "aggregation", "score": "score_count", "err": 0.2,
+                   "priority": 0}
+    server = QueryServer(QueryEngine(index, Sleepy(wl)), port=0,
+                         admission_window=0.0, max_workers=1).start()
+    try:
+        client = QueryClient(server.url)
+        client.wait_ready(30)
+        warm = client.query([urgent_spec])      # urgent ids now cached
+        done = {}
+
+        def post_heavy():
+            done["heavy"] = client.query([heavy_spec])
+
+        t = threading.Thread(target=post_heavy, daemon=True)
+        t.start()
+        time.sleep(0.15)                        # scan reaches the worker
+        t0 = time.monotonic()
+        urgent = client.query([urgent_spec], priority=0)
+        urgent_s = time.monotonic() - t0
+        t.join(60)
+        assert not t.is_alive()
+        assert urgent["session"]["preemptions"] == 0
+        stats = client.stats()
+        assert stats["server"]["scheduler"]["preemptions"] >= 1
+        # the urgent request did NOT wait out the whole scan
+        assert urgent_s < 1.0
+        served_fresh = stats["accounts"]["fresh_total"]
+    finally:
+        server.shutdown()
+
+    # serial replay on a fresh engine: same three requests, no scheduler
+    replay_eng = QueryEngine(index, wl)
+    replay_fresh = 0
+    for specs in ([urgent_spec], [heavy_spec], [urgent_spec]):
+        out = QuerySession(replay_eng,
+                           [QuerySpec.from_dict(dict(s)) for s in specs]
+                           ).execute()
+        replay_fresh += out.stats["fresh_total"]
+    assert served_fresh == replay_fresh
+    # the warm request itself paid fresh labels exactly once
+    assert warm["request"]["fresh"] > 0
+
+
+# -- registry close() ------------------------------------------------------
+def test_registry_close_is_idempotent(wl, index):
+    registry = WorkloadRegistry()
+    registry.register("video", QueryEngine(index, wl))
+    assert registry.get("video").loaded
+    registry.close()
+    registry.close()                        # second close: clean no-op
+    # a closed engine still answers (its broker labels inline)
+    res = registry.get("video").engine.execute(
+        QuerySpec(kind="aggregation", score="score_count", err=0.2))
+    assert res.estimate is not None
+
+
+def test_registry_close_during_lazy_load_neither_deadlocks_nor_breaks():
+    """close() racing an in-flight lazy load returns promptly (the load is
+    skipped, not awaited) and the load itself still completes."""
+    entry = WorkloadEntry("slow")
+    release = threading.Event()
+    loaded = threading.Event()
+
+    def slow_load():
+        release.wait(10.0)
+        entry.engine = "engine"             # sentinel: load published
+        loaded.set()
+
+    entry._load = slow_load
+    registry = WorkloadRegistry()
+    registry._add(entry)
+
+    loader = threading.Thread(target=entry.ensure_loaded, daemon=True)
+    loader.start()
+    time.sleep(0.05)                        # loader holds the entry lock
+    t0 = time.monotonic()
+    registry.close()                        # must not block on the load
+    assert time.monotonic() - t0 < 5.0
+    assert not loaded.is_set()              # close did not wait it out
+    release.set()
+    loader.join(5.0)
+    assert loaded.is_set() and entry.loaded
