@@ -1,0 +1,172 @@
+"""Proxy-score materialization roofline: scores/s alongside labels/s.
+
+The paper's query-time economics rest on propagation (§4.2) being many
+orders of magnitude cheaper than target-DNN labeling: a proxy score is
+O(k) arithmetic over cached rep distances, a label is a full DNN
+invocation.  This bench measures that roofline directly, for both scoring
+paths the engine can take:
+
+* **host** — the float64 numpy reference in :mod:`repro.core.propagation`
+  (the CPU serving default);
+* **fused** — the jitted device path in :mod:`repro.kernels.propagate`
+  (Pallas on TPU, XLA reference elsewhere) that
+  :class:`~repro.core.resident.ResidentIndexState` replays against
+  device-resident rep structures;
+
+plus end-to-end ``QueryEngine.proxy_scores`` rates (rep-score mapping +
+propagation + cache publish) with the resident path off and forced on.
+``labels_per_s`` comes from the §3.4 cost model (hardware-independent, like
+every other bench metric here); ``scores_per_label`` is the roofline ratio.
+
+Parity is asserted, not just reported: fused numeric must match host within
+float32 tolerance, categorical must agree exactly, and fused top1 must keep
+the host path's score levels monotone.
+
+    PYTHONPATH=src python -m benchmarks.proxy_scoring --quick --json out.json
+
+(the ``--json`` form feeds the CI ``bench-gate`` job's regression check,
+``benchmarks/check_regression.py``)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import propagation as host
+from repro.core import schema as schema_lib
+from repro.core.engine import QueryEngine
+from repro.core.index import TastiIndex
+
+N_CLASSES = 8
+
+
+def _make_structures(n: int, c: int, k: int, seed: int = 0):
+    """Synthetic rep structures with the real invariants (ascending d2,
+    in-range ids) — propagation cost doesn't depend on the geometry."""
+    rng = np.random.default_rng(seed)
+    topk_ids = rng.integers(0, c, (n, k)).astype(np.int64)
+    topk_d2 = np.sort(rng.random((n, k)) * 4.0, axis=1)
+    rep_scores = rng.random(c)
+    return rep_scores, topk_ids, topk_d2
+
+
+def _rate(fn, n_items: int, repeats: int = 5, inner: int = 3) -> float:
+    """items/sec at best-of-``repeats`` (each averaging ``inner`` calls);
+    one warmup call first so jit compilation never lands in a sample."""
+    fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return n_items / max(best, 1e-12)
+
+
+def run(quick: bool = False):
+    import jax.numpy as jnp
+
+    from repro.kernels.propagate.ops import propagate as fused
+    n, c, k = (60_000, 256, 8) if quick else (250_000, 512, 8)
+    rep_scores, topk_ids, topk_d2 = _make_structures(n, c, k)
+    cat_scores = np.floor(rep_scores * N_CLASSES)
+    dev = dict(scores=jnp.asarray(rep_scores, jnp.float32),
+               cat=jnp.asarray(cat_scores, jnp.float32),
+               ids=jnp.asarray(topk_ids, jnp.int32),
+               d2=jnp.asarray(topk_d2, jnp.float32))
+    rows = []
+
+    host_calls = {
+        "numeric": lambda: host.propagate_numeric(rep_scores, topk_ids,
+                                                  topk_d2),
+        "top1": lambda: host.propagate_top1(rep_scores, topk_ids, topk_d2),
+        "categorical": lambda: host.propagate_categorical(
+            cat_scores, topk_ids, topk_d2, N_CLASSES),
+    }
+    fused_calls = {
+        "numeric": lambda: np.asarray(fused(dev["scores"], dev["ids"],
+                                            dev["d2"], "numeric",
+                                            donate=False)),
+        "top1": lambda: np.asarray(fused(dev["scores"], dev["ids"],
+                                         dev["d2"], "top1", donate=False)),
+        "categorical": lambda: np.asarray(fused(dev["cat"], dev["ids"],
+                                                dev["d2"], "categorical",
+                                                n_classes=N_CLASSES,
+                                                donate=False)),
+    }
+    for mode in ("numeric", "top1", "categorical"):
+        rows.append((f"proxy/host_{mode}", "scores_per_s",
+                     round(_rate(host_calls[mode], n), 1)))
+        rows.append((f"proxy/fused_{mode}", "scores_per_s",
+                     round(_rate(fused_calls[mode], n), 1)))
+
+    # parity assertions: the fast path must not buy speed with wrong scores
+    h_num, f_num = host_calls["numeric"](), fused_calls["numeric"]()
+    if not np.allclose(h_num, f_num, rtol=1e-4, atol=1e-5):
+        raise AssertionError(
+            "fused numeric propagation diverged from the float64 host path "
+            f"(max abs err {np.abs(h_num - f_num).max():.3g})")
+    h_cat, f_cat = host_calls["categorical"](), fused_calls["categorical"]()
+    if (h_cat != f_cat).any():
+        raise AssertionError(
+            f"fused categorical vote disagreed on {(h_cat != f_cat).sum()} "
+            f"of {n} records")
+    f_top1 = fused_calls["top1"]()
+    levels = rep_scores[topk_ids[:, 0]].astype(np.float32)
+    if (np.diff(levels[np.argsort(-f_top1, kind="stable")]) > 0).any():
+        raise AssertionError(
+            "fused top1 propagation flipped distinct score levels; the "
+            "distance nudge must only reorder within one level")
+
+    # end-to-end engine rates: rep-score mapping + propagation + publish
+    # (cache cleared per call — we are timing materialization, not the hit)
+    index = TastiIndex(embeddings=np.zeros((n, 4), np.float32),
+                       rep_ids=np.arange(c),
+                       annotations=[float(s) for s in rep_scores],
+                       topk_d2=topk_d2, topk_ids=topk_ids, k=k)
+    for label, resident in (("engine_host", False), ("engine_resident", True)):
+        eng = QueryEngine(index, resident=resident)
+
+        def call(eng=eng):
+            eng._proxy_cache.clear()
+            eng.proxy_scores(float, mode="numeric", score_key="bench")
+        rows.append((f"proxy/{label}", "scores_per_s",
+                     round(_rate(call, n), 1)))
+        if resident and eng.stats["proxy_device_computes"] == 0:
+            raise AssertionError("forced-resident engine never took the "
+                                 "fused device path")
+
+    labels_per_s = 1.0 / schema_lib.TARGET_DNN_COST_S
+    best_scores = max(v for name, m, v in rows
+                      if m == "scores_per_s" and "engine" not in name)
+    rows.append(("proxy/model", "labels_per_s", round(labels_per_s, 1)))
+    rows.append(("proxy/roofline", "scores_per_label",
+                 round(best_scores / labels_per_s, 1)))
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="proxy scoring roofline: scores/s (host + fused device "
+                    "paths) vs cost-model labels/s")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="also write the measurements as JSON (the CI "
+                         "bench-gate artifact)")
+    args = ap.parse_args(argv)
+    rows = run(args.quick)
+    payload = {"quick": args.quick,
+               "metrics": {f"{name}.{metric}": value
+                           for name, metric, value in rows}}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ MODULES = [
     "table1_no_guarantees", "table2_cracking", "fig9_factor_analysis",
     "fig10_lesion", "fig11_buckets", "fig12_train_examples",
     "fig13_embedding_size", "serve_throughput", "oracle_scaling",
-    "multi_workload", "slo_load",
+    "multi_workload", "slo_load", "proxy_scoring",
 ]
 
 

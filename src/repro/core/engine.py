@@ -41,6 +41,7 @@ from repro.core.broker import OracleAccount, OracleBroker
 from repro.core.index import TastiIndex
 from repro.core.oracle_pool import OraclePool
 from repro.core.queries.registry import QueryExecutor, get_executor
+from repro.core.resident import ResidentIndexState
 
 PROPAGATION_MODES = ("numeric", "top1", "categorical")
 
@@ -173,13 +174,20 @@ class QueryEngine:
                  crack: bool = False, max_oracle_batch: int = 64,
                  broker: Optional[OracleBroker] = None,
                  oracle_replicas: int = 1,
-                 oracle_pool: Optional[OraclePool] = None):
+                 oracle_pool: Optional[OraclePool] = None,
+                 resident: Optional[bool] = None):
         self.index = index
         self.workload = workload
         self.crack_by_default = bool(crack)
         self.max_oracle_batch = int(max_oracle_batch)
         self._proxy_cache: Dict[Any, np.ndarray] = {}
         self._proxy_cache_version = index.version
+        # in-flight propagations (single-flight): key -> Event set on finish
+        self._proxy_flights: Dict[Any, threading.Event] = {}
+        # device-resident rep structures for the fused scoring hot path;
+        # `resident=None` auto-enables on accelerators only (see
+        # repro.core.resident for the policy and the env override)
+        self.resident = ResidentIndexState(index, enabled=resident)
         self._broker = broker
         # oracle sharding: >1 replicas put an OraclePool behind the broker's
         # microbatcher; an externally-owned pool may be passed in instead
@@ -207,10 +215,15 @@ class QueryEngine:
         self.stats: Dict[str, int] = {
             "propagation_computes": 0,
             "proxy_cache_hits": 0,
+            "proxy_device_computes": 0,
+            "proxy_flight_waits": 0,
             "label_fresh": 0,
             "label_cache_hits": 0,
             "cracked_records": 0,
         }
+        # eager device-memory release on crack; correctness relies only on
+        # the per-call version check inside ResidentIndexState.propagate
+        self._on_crack.append(lambda added: self.resident.invalidate())
 
     # -- oracle broker -------------------------------------------------------
     def _annotate(self, ids: np.ndarray):
@@ -322,36 +335,85 @@ class QueryEngine:
 
         The cache is invalidated whenever the index version changes (i.e.
         after cracking), so callers always see post-crack scores.
+
+        Propagation is **single-flight**: the first caller of a key computes
+        (outside the engine lock — on the device-resident fast path when the
+        engine's :class:`~repro.core.resident.ResidentIndexState` is enabled,
+        else the float64 host path), concurrent callers of the *same* key
+        park on its flight and reuse the result as a cache hit, and callers
+        of *different* keys propagate in parallel instead of racing the
+        lock.  A crack landing mid-compute discards the stale result and the
+        owner recomputes against the new index.
         """
         if mode not in PROPAGATION_MODES:
             raise ValueError(f"unknown propagation mode {mode!r}; "
                              f"expected one of {PROPAGATION_MODES}")
-        with self._lock:
-            if self._proxy_cache_version != self.index.version:
-                self._proxy_cache.clear()
-                self._proxy_cache_version = self.index.version
-            key = (self._cache_key(score, score_key), mode, n_classes)
-            if key in self._proxy_cache:
-                self.stats["proxy_cache_hits"] += 1
-                return self._proxy_cache[key]
-            fn = self._score_fn(score)
-            rep_scores = self.index.rep_scores(fn)
-            if mode == "numeric":
-                out = propagation.propagate_numeric(
-                    rep_scores, self.index.topk_ids, self.index.topk_d2)
-            elif mode == "top1":
-                out = propagation.propagate_top1(
-                    rep_scores, self.index.topk_ids, self.index.topk_d2)
-            else:  # categorical
-                if n_classes is None:
-                    raise ValueError(
-                        "categorical propagation requires n_classes")
-                out = propagation.propagate_categorical(
-                    rep_scores, self.index.topk_ids, self.index.topk_d2,
-                    n_classes=n_classes).astype(np.float64)
-            self.stats["propagation_computes"] += 1
-            self._proxy_cache[key] = out
-            return out
+        if mode == "categorical" and n_classes is None:
+            raise ValueError("categorical propagation requires n_classes")
+        fn = self._score_fn(score)  # resolve early: never strand waiters on
+        key = (self._cache_key(score, score_key), mode, n_classes)  # bad specs
+        while True:
+            with self._lock:
+                if self._proxy_cache_version != self.index.version:
+                    self._proxy_cache.clear()
+                    self._proxy_cache_version = self.index.version
+                if key in self._proxy_cache:
+                    self.stats["proxy_cache_hits"] += 1
+                    return self._proxy_cache[key]
+                flight = self._proxy_flights.get(key)
+                if flight is None:
+                    flight = threading.Event()
+                    self._proxy_flights[key] = flight
+                    owner = True
+                    # crack replaces these wholesale (never in place), so the
+                    # refs are a consistent snapshot for `version`
+                    version = self.index.version
+                    annotations = self.index.annotations
+                    topk_ids, topk_d2 = self.index.topk_ids, self.index.topk_d2
+                else:
+                    owner = False
+                    self.stats["proxy_flight_waits"] += 1
+            if not owner:
+                flight.wait()
+                continue      # cache hit, or recompute if the owner lost
+            try:
+                rep_scores = np.asarray([fn(a) for a in annotations],
+                                        np.float64)
+                out = self._propagate(rep_scores, topk_ids, topk_d2,
+                                      mode, n_classes, version)
+            except BaseException:
+                with self._lock:
+                    self._proxy_flights.pop(key, None)
+                flight.set()  # waiters retry, become owner, re-raise
+                raise
+            with self._lock:
+                self._proxy_flights.pop(key, None)
+                flight.set()
+                if self.index.version == version:
+                    self.stats["propagation_computes"] += 1
+                    self._proxy_cache[key] = out
+                    return out
+            # cracked mid-compute: result is stale, go around again
+
+    def _propagate(self, rep_scores: np.ndarray, topk_ids: np.ndarray,
+                   topk_d2: np.ndarray, mode: str, n_classes: Optional[int],
+                   version: int) -> np.ndarray:
+        """One propagation over a snapshot: fused device call when resident
+        scoring is on (falling back on a mid-compute crack or device error),
+        float64 numpy otherwise."""
+        if self.resident.enabled:
+            out = self.resident.propagate(rep_scores, mode, version=version,
+                                          n_classes=n_classes)
+            if out is not None:
+                self.add_stats(proxy_device_computes=1)
+                return out
+        if mode == "numeric":
+            return propagation.propagate_numeric(rep_scores, topk_ids, topk_d2)
+        if mode == "top1":
+            return propagation.propagate_top1(rep_scores, topk_ids, topk_d2)
+        return propagation.propagate_categorical(
+            rep_scores, topk_ids, topk_d2,
+            n_classes=n_classes).astype(np.float64)
 
     # -- oracle with the shared label cache ----------------------------------
     def _make_oracle(self, score_fn: Callable, reuse: bool,

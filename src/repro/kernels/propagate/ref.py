@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for fused score propagation (paper §4.2) on device.
+
+Mirrors the float64 host path in :mod:`repro.core.propagation` in float32:
+inverse-distance weights over the cached top-k representative structures,
+with padded columns (squared distance at or above
+:data:`~repro.kernels.distance_topk.ops.PAD_DIST`) masked to zero weight.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.distance_topk.ops import PAD_DIST
+
+
+def masked_weights(topk_d2: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Inverse-distance weights (N,k) with padded columns zeroed."""
+    d2 = topk_d2.astype(jnp.float32)
+    w = 1.0 / (jnp.sqrt(jnp.maximum(d2, 0.0)) + eps)
+    return jnp.where(d2 >= PAD_DIST, 0.0, w)
+
+
+def tie_break_prescale(rep_scores: jnp.ndarray,
+                       topk_d2: jnp.ndarray) -> jnp.ndarray:
+    """Scalar multiplier for the top-1 distance nudge.
+
+    ``eps / (1 + max distance)`` with ``eps`` strictly below the smallest
+    nonzero gap between distinct rep scores (capped at 1e-6) — the device
+    twin of :func:`repro.core.propagation.top1_tie_break_eps`, so distance
+    can only reorder records whose nearest reps score equal.
+    """
+    scores = rep_scores.astype(jnp.float32)
+    if scores.shape[0] >= 2:
+        gaps = jnp.diff(jnp.sort(scores))
+        min_gap = jnp.min(jnp.where(gaps > 0, gaps, jnp.inf))
+        eps = jnp.minimum(jnp.float32(1e-6), 0.5 * min_gap)
+    else:
+        eps = jnp.float32(1e-6)
+    d0 = jnp.sqrt(jnp.maximum(topk_d2[:, 0].astype(jnp.float32), 0.0))
+    return eps / (1.0 + jnp.max(d0))
+
+
+def propagate_numeric_ref(rep_scores: jnp.ndarray, topk_ids: jnp.ndarray,
+                          topk_d2: jnp.ndarray, eps: float = 1e-6,
+                          clip01: bool = False) -> jnp.ndarray:
+    """rep_scores (C,), topk_ids/(d2) (N,k) -> (N,) weighted-mean scores."""
+    w = masked_weights(topk_d2, eps)
+    s = rep_scores.astype(jnp.float32)[topk_ids]
+    out = (w * s).sum(1) / w.sum(1)
+    return jnp.clip(out, 0.0, 1.0) if clip01 else out
+
+
+def propagate_categorical_ref(rep_scores: jnp.ndarray, topk_ids: jnp.ndarray,
+                              topk_d2: jnp.ndarray, n_classes: int,
+                              eps: float = 1e-6) -> jnp.ndarray:
+    """Distance-weighted vote -> (N,) class ids (as float32, like the
+    engine's proxy arrays)."""
+    w = masked_weights(topk_d2, eps)                       # (N,k)
+    cls = rep_scores.astype(jnp.float32)[topk_ids].astype(jnp.int32)
+    onehot = cls[:, :, None] == jnp.arange(n_classes, dtype=jnp.int32)
+    votes = jnp.sum(jnp.where(onehot, w[:, :, None], 0.0), axis=1)
+    return jnp.argmax(votes, axis=1).astype(jnp.float32)
+
+
+def propagate_top1_ref(rep_scores: jnp.ndarray, topk_ids: jnp.ndarray,
+                       topk_d2: jnp.ndarray,
+                       clip01: bool = False) -> jnp.ndarray:
+    """k=1 propagation ranked (score desc, dist asc) — limit-query scoring."""
+    base = rep_scores.astype(jnp.float32)[topk_ids[:, 0]]
+    d = jnp.sqrt(jnp.maximum(topk_d2[:, 0].astype(jnp.float32), 0.0))
+    out = base - tie_break_prescale(rep_scores, topk_d2) * d
+    return jnp.clip(out, 0.0, 1.0) if clip01 else out

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.distance_topk.ops import distance_topk
+from repro.kernels.distance_topk.ops import PAD_DIST, distance_topk
 from repro.kernels.distance_topk.ref import distance_topk_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
@@ -68,6 +68,45 @@ def test_distance_topk_randomized_parity(seed):
     np.testing.assert_allclose(np.sort(d_from_ids, 1),
                                np.sort(np.asarray(d_ref), 1),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("n_reps,k", [(3, 8), (1, 4), (5, 16)])
+def test_distance_topk_pad_columns_are_sentinels(impl, n_reps, k):
+    """Regression: with fewer reps than k the padded columns used to tile
+    the worst real *distance*, double-weighting that rep downstream.  They
+    must now carry the PAD_DIST sentinel, with ids still in range, and the
+    real columns must be untouched."""
+    rng = np.random.default_rng(n_reps * 10 + k)
+    x = jnp.asarray(rng.normal(size=(97, 24)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(n_reps, 24)).astype(np.float32))
+    d_k, i_k = distance_topk(x, r, k, impl=impl, interpret=(impl == "pallas"),
+                             block_n=64, block_c=64)
+    d_k, i_k = np.asarray(d_k), np.asarray(i_k)
+    assert d_k.shape == (97, k) and i_k.shape == (97, k)
+    assert np.all(d_k[:, n_reps:] >= PAD_DIST)
+    assert i_k.min() >= 0 and i_k.max() < n_reps
+    d_ref, i_ref = distance_topk_ref(x, r, n_reps)
+    np.testing.assert_allclose(d_k[:, :n_reps], np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.tier1
+def test_distance_topk_float16_pad_reps_stay_finite():
+    """Regression: the padded-representative fill value (1e17) overflowed
+    float16 to inf, and inf - inf in the distance expansion produced NaNs
+    that *won* the top-k.  The fill is now clamped to the embedding dtype."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(70, 16)).astype(np.float16))
+    r = jnp.asarray(rng.normal(size=(5, 16)).astype(np.float16))  # pads to 64
+    d_k, i_k = distance_topk(x, r, 3, impl="pallas", interpret=True,
+                             block_n=64, block_c=64)
+    d_k = np.asarray(d_k)
+    assert np.isfinite(d_k).all()
+    assert np.asarray(i_k).max() < 5  # padded reps never win
+    d_ref, _ = distance_topk_ref(x, r, 3)
+    np.testing.assert_allclose(d_k, np.asarray(d_ref), rtol=5e-2, atol=5e-2)
 
 
 @pytest.mark.tier1

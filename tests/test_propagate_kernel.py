@@ -1,0 +1,177 @@
+"""Parity for the fused propagation family (repro.kernels.propagate): the
+Pallas kernel (interpret mode on CPU) and the XLA reference against the
+float64 host path in repro.core.propagation, over fixed sweeps, randomized
+shapes/dtypes, and the padding edge cases (k > n_reps, one rep, empty index).
+Tier-1 gates, like distance_topk and fpf_update — the serving hot path
+replays these kernels against device-resident index structures."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.propagation import propagate_categorical, propagate_numeric
+from repro.kernels.distance_topk.ops import PAD_DIST, distance_topk
+from repro.kernels.propagate.ops import MODES, propagate
+
+IMPLS = ("xla", "pallas")
+
+
+def _call(rep_scores, ids, d2, mode, impl, **kw):
+    out = propagate(jnp.asarray(rep_scores, jnp.float32),
+                    jnp.asarray(np.asarray(ids, np.int32)),
+                    jnp.asarray(np.asarray(d2, np.float32)),
+                    mode, impl=impl, interpret=(impl == "pallas"),
+                    block_n=128, donate=False, **kw)
+    return np.asarray(out, np.float64)
+
+
+def _random_instance(seed, n_classes=None, pad_cols=0):
+    rng = np.random.default_rng(seed)
+    c = int(rng.integers(3, 40))
+    n = int(rng.integers(5, 300))
+    k = int(rng.integers(1, min(c, 8) + 1)) + pad_cols
+    if n_classes is None:
+        rep_scores = rng.uniform(0.0, 1.0, size=c)
+    else:
+        rep_scores = rng.integers(0, n_classes, size=c).astype(np.float64)
+    ids = rng.integers(0, c, size=(n, k))
+    d2 = np.sort(rng.uniform(0.0, 9.0, size=(n, k)), axis=1)
+    if pad_cols:
+        d2[:, -pad_cols:] = PAD_DIST
+    return rep_scores, ids, d2
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("seed", range(6))
+def test_numeric_parity(impl, seed):
+    rep_scores, ids, d2 = _random_instance(seed)
+    got = _call(rep_scores, ids, d2, "numeric", impl)
+    want = propagate_numeric(rep_scores, ids, d2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("seed", range(6))
+def test_categorical_parity(impl, seed):
+    n_classes = int(np.random.default_rng(seed + 500).integers(2, 9))
+    rep_scores, ids, d2 = _random_instance(seed, n_classes=n_classes)
+    got = _call(rep_scores, ids, d2, "categorical", impl, n_classes=n_classes)
+    want = propagate_categorical(rep_scores, ids, d2, n_classes=n_classes)
+    np.testing.assert_array_equal(got, want.astype(np.float64))
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("seed", range(6))
+def test_top1_parity(impl, seed):
+    """Float32 can't promise the host path bit-for-bit; it must promise the
+    same *semantics*: never flip distinct nearest-rep score levels, and
+    order by distance within a level up to f32 output ties."""
+    rep_scores, ids, d2 = _random_instance(seed)
+    got = _call(rep_scores, ids, d2, "top1", impl)
+    base = rep_scores[ids[:, 0]].astype(np.float32)
+    order = np.argsort(-got, kind="stable")
+    sb = base[order]
+    assert not (np.diff(sb) > 0).any(), "device top1 flipped score levels"
+    sd, sg = np.sqrt(d2[order][:, 0]), got[order]
+    for lvl in np.unique(sb):
+        m = sb == lvl
+        dd, gg = sd[m], sg[m]
+        # closer must rank higher unless the f32 outputs tied exactly
+        bad = (np.diff(dd) < 0) & (np.diff(gg) != 0)
+        assert not bad.any()
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("mode", MODES)
+def test_padded_columns_carry_no_weight(impl, mode):
+    """k > n_reps padding (PAD_DIST sentinel columns) must not change the
+    result vs the same instance without the padding."""
+    rep_scores, ids, d2 = _random_instance(7, n_classes=(
+        4 if mode == "categorical" else None), pad_cols=3)
+    kw = {"n_classes": 4} if mode == "categorical" else {}
+    with_pad = _call(rep_scores, ids, d2, mode, impl, **kw)
+    without = _call(rep_scores, ids[:, :-3], d2[:, :-3], mode, impl, **kw)
+    np.testing.assert_allclose(with_pad, without, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("mode", MODES)
+def test_empty_and_one_rep_index(impl, mode):
+    kw = {"n_classes": 3} if mode == "categorical" else {}
+    empty = _call(np.zeros(0), np.zeros((0, 4), np.int64),
+                  np.zeros((0, 4)), mode, impl, **kw)
+    assert empty.shape == (0,)
+    # one rep, k=4: three sentinel columns from distance_topk-style padding
+    ids = np.zeros((9, 4), np.int64)
+    d2 = np.full((9, 4), PAD_DIST)
+    d2[:, 0] = np.linspace(0.0, 4.0, 9)
+    out = _call(np.asarray([2.0]), ids, d2, mode, impl, **kw)
+    if mode == "top1":
+        assert np.all(out <= 2.0) and out[0] == pytest.approx(2.0)
+        assert np.all(np.diff(out) <= 0)  # farther from the only rep: lower
+    else:
+        np.testing.assert_allclose(out, 2.0, rtol=1e-6)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_low_precision_rep_structures(impl, dtype):
+    """bf16/f16 distance caches (and the float16 pad sentinel regression):
+    outputs must be finite and close to the float32 computation."""
+    rep_scores, ids, d2 = _random_instance(11)
+    d2_lp = jnp.asarray(d2, jnp.float32).astype(dtype)
+    out = np.asarray(propagate(jnp.asarray(rep_scores, jnp.float32),
+                               jnp.asarray(np.asarray(ids, np.int32)),
+                               d2_lp, "numeric", impl=impl,
+                               interpret=(impl == "pallas"), block_n=128,
+                               donate=False))
+    assert np.isfinite(out).all()
+    want = propagate_numeric(rep_scores, ids,
+                             np.asarray(d2_lp, np.float64))
+    np.testing.assert_allclose(out, want, rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("mode", MODES)
+def test_clip01_matches_unclipped_clip(mode):
+    rep_scores, ids, d2 = _random_instance(13, n_classes=(
+        4 if mode == "categorical" else None))
+    rep_scores = rep_scores * 3.0 - 1.0 if mode != "categorical" else rep_scores
+    kw = {"n_classes": 4} if mode == "categorical" else {}
+    clipped = _call(rep_scores, ids, d2, mode, "xla", clip01=True, **kw)
+    plain = _call(rep_scores, ids, d2, mode, "xla", **kw)
+    np.testing.assert_allclose(clipped, np.clip(plain, 0.0, 1.0),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.tier1
+def test_validation_errors():
+    ids = jnp.zeros((4, 2), jnp.int32)
+    d2 = jnp.zeros((4, 2), jnp.float32)
+    s = jnp.zeros((3,), jnp.float32)
+    with pytest.raises(ValueError, match="mode"):
+        propagate(s, ids, d2, "nearest")
+    with pytest.raises(ValueError, match="n_classes"):
+        propagate(s, ids, d2, "categorical")
+
+
+@pytest.mark.tier1
+def test_fused_on_real_distance_topk_structures():
+    """End-to-end shape check on real kernel output, including the
+    k > n_reps sentinel padding distance_topk now emits."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(137, 24)).astype(np.float32))
+    r = x[:5]
+    d2, ids = distance_topk(x, r, k=8)  # k_eff=5, 3 sentinel columns
+    assert np.all(np.asarray(d2)[:, 5:] >= PAD_DIST)
+    assert np.asarray(ids).max() < 5
+    rep_scores = rng.uniform(size=5)
+    got = np.asarray(propagate(jnp.asarray(rep_scores, jnp.float32),
+                               ids, d2, "numeric", impl="xla", donate=False))
+    want = propagate_numeric(rep_scores, np.asarray(ids), np.asarray(d2))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

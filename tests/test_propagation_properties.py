@@ -15,7 +15,8 @@ import numpy as np
 import pytest
 
 from repro.core.propagation import (propagate_categorical, propagate_numeric,
-                                    propagate_top1)
+                                    propagate_top1, top1_tie_break_eps)
+from repro.kernels.distance_topk.ops import PAD_DIST
 
 pytestmark = pytest.mark.tier1
 
@@ -109,6 +110,56 @@ def test_top1_tie_break_never_crosses_score_levels():
     d2 = np.array([[1e6], [0.0]])  # record 0 is *very* far from its rep
     out = propagate_top1(rep_scores, ids, d2)
     assert out[0] > out[1]
+
+
+@pytest.mark.parametrize("gap", [1e-7, 1e-9, 1e-12])
+def test_top1_tie_break_respects_sub_eps_gaps(gap):
+    """Regression: a fixed 1e-6 perturbation used to flip distinct rep
+    scores whose gap was below it (common for probability-valued scores).
+    The scale now stays strictly below the smallest nonzero gap."""
+    rep_scores = np.array([0.5, 0.5 - gap])
+    ids = np.array([[0], [1]])
+    d2 = np.array([[1e6], [0.0]])
+    out = propagate_top1(rep_scores, ids, d2)
+    assert out[0] > out[1], f"gap {gap} flipped by the distance nudge"
+    assert top1_tie_break_eps(rep_scores) < gap
+
+
+def test_top1_empty_index_no_crash():
+    """Regression: d.max() raised on a zero-record index."""
+    out = propagate_top1(np.array([1.0, 2.0]),
+                         np.zeros((0, 1), np.int64), np.zeros((0, 1)))
+    assert out.shape == (0,)
+
+
+def test_top1_constant_scores_rank_by_distance():
+    """All reps at one score level: eps falls back to the 1e-6 cap and
+    distance alone orders the records."""
+    rep_scores = np.array([3.0, 3.0, 3.0])
+    ids = np.array([[0], [1], [2]])
+    d2 = np.array([[4.0], [0.0], [1.0]])
+    out = propagate_top1(rep_scores, ids, d2)
+    assert out[1] > out[2] > out[0]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_padded_columns_are_weightless(seed):
+    """Regression: k > n_reps padding used to tile the worst real entry,
+    silently double-weighting that rep.  Sentinel-distance columns must now
+    leave every propagation mode unchanged."""
+    rep_scores, ids, d2, rng = _random_instance(seed)
+    pad_ids = np.concatenate([ids, ids[:, -1:]], axis=1)
+    pad_d2 = np.concatenate([d2, np.full((len(ids), 1), PAD_DIST)], axis=1)
+    np.testing.assert_allclose(propagate_numeric(rep_scores, pad_ids, pad_d2),
+                               propagate_numeric(rep_scores, ids, d2),
+                               rtol=1e-12)
+    np.testing.assert_allclose(propagate_top1(rep_scores, pad_ids, pad_d2),
+                               propagate_top1(rep_scores, ids, d2),
+                               rtol=1e-12)
+    cls_scores = np.floor(np.abs(rep_scores)) % 4
+    np.testing.assert_array_equal(
+        propagate_categorical(cls_scores, pad_ids, pad_d2, n_classes=4),
+        propagate_categorical(cls_scores, ids, d2, n_classes=4))
 
 
 @pytest.mark.parametrize("seed", SEEDS)
