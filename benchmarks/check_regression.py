@@ -104,9 +104,13 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--baseline", required=True,
                     help="committed baseline JSON (BENCH_baseline.json)")
     ap.add_argument("--current", action="append", required=True,
-                    metavar="ALIAS=PATH",
+                    metavar="ALIAS[,ALIAS...]=PATH",
                     help="benchmark --json output to check, keyed by the "
-                         "alias baseline metrics use (repeatable)")
+                         "alias baseline metrics use (repeatable).  A "
+                         "comma-separated alias list maps several aliases "
+                         "to one file (e.g. serve_throughput,obs_overhead= "
+                         "reports/serve_throughput.json, whose run emits "
+                         "both metric families)")
     ap.add_argument("--scale", action="append", default=[],
                     metavar="METRIC=FACTOR",
                     help="multiply an observed metric before checking "
@@ -127,11 +131,15 @@ def main(argv: Optional[List[str]] = None) -> None:
         baseline = json.load(f)
     currents: Dict[str, Dict[str, float]] = {}
     for spec in args.current:
-        alias, _, path = spec.partition("=")
-        if not path:
-            ap.error(f"--current wants ALIAS=PATH, got {spec!r}")
+        aliases, _, path = spec.partition("=")
+        if not path or not aliases:
+            ap.error(f"--current wants ALIAS[,ALIAS...]=PATH, got {spec!r}")
         with open(path) as f:
-            currents[alias] = flatten(json.load(f))
+            flat = flatten(json.load(f))
+        for alias in aliases.split(","):
+            if not alias:
+                ap.error(f"--current {spec!r} has an empty alias")
+            currents[alias] = flat
     scales: Dict[str, float] = {}
     for spec in args.scale:
         key, _, factor = spec.rpartition("=")

@@ -47,12 +47,12 @@ def _spec_lists(quick: bool) -> List[List[dict]]:
     return lists
 
 
-def _start_server(index, wl, stem: str) -> QueryServer:
+def _start_server(index, wl, stem: str, obs=None) -> QueryServer:
     engine = QueryEngine(index, wl)
     store = LabelStore.for_index(stem, index)
     store.attach(engine.broker, engine)
     return QueryServer(engine, port=0, admission_window=0.05,
-                       max_workers=4, store=store).start()
+                       max_workers=4, store=store, obs=obs).start()
 
 
 def _drive(url: str, spec_lists: List[List[dict]], concurrent: bool):
@@ -120,6 +120,32 @@ def run(quick: bool = False):
                     f"warm {mode} restart issued {fresh} fresh target-DNN "
                     "invocations on a repeated spec list; the persistent "
                     "label store must answer repeats for free")
+
+        # observability overhead: the warm/concurrent drive (HTTP + sessions,
+        # zero oracle work — the layer where per-request tracing and metric
+        # increments could actually show up) with observability ON vs OFF on
+        # the same warmed store.  Best-of-3 per variant damps scheduler
+        # jitter; the bench gate asserts the ratio stays >= 0.95.
+        stem = f"{tmp}/concurrent"
+        best = {}
+        for obs_on in (True, False):
+            qps_best = 0.0
+            for _ in range(3):
+                server = _start_server(index, wl, stem, obs=obs_on)
+                qps, fresh = _drive(server.url, spec_lists, True)
+                server.shutdown()
+                if fresh != 0:
+                    raise AssertionError(
+                        f"obs_overhead leg (obs={obs_on}) paid {fresh} "
+                        "fresh labels on the warmed store")
+                qps_best = max(qps_best, qps)
+            best[obs_on] = qps_best
+        rows.append(("serve/obs_overhead", "qps_ratio",
+                     round(best[True] / best[False], 4)))
+        rows.append(("serve/obs_overhead", "qps_enabled",
+                     round(best[True], 2)))
+        rows.append(("serve/obs_overhead", "qps_disabled",
+                     round(best[False], 2)))
     return rows
 
 

@@ -85,6 +85,25 @@ def _row_parity(row: dict) -> dict:
     return {k: row[k] for k in _PARITY_KEYS if k in row}
 
 
+def _slowest_trace(client: QueryClient, report) -> Optional[dict]:
+    """Fetch the span tree of the slowest completed interactive request
+    from the server's flight recorder — the postmortem artifact the CI
+    slo-gate uploads when the p99 assertion trips.  Best-effort: ``None``
+    when the trace aged out of the ring buffer (it is bounded)."""
+    done = [o for o in report.outcomes if o.ok and o.trace_id]
+    if not done:
+        return None
+    worst = max(done, key=lambda o: o.latency_s)
+    try:
+        doc = client.traces(trace_id=worst.trace_id)
+        chrome = client.traces(trace_id=worst.trace_id, fmt="chrome")
+    except Exception:  # noqa: BLE001 - a missing postmortem must not
+        return None    # fail the benchmark that produced the numbers
+    return {"trace_id": worst.trace_id,
+            "latency_ms": round(worst.latency_s * 1e3, 3),
+            "trace": doc, "chrome": chrome}
+
+
 def _collide(index: TastiIndex, workload, quick: bool,
              preempt: bool) -> Dict[str, object]:
     """One full collision: warm-up, heavy scan + open-loop interactive
@@ -121,9 +140,9 @@ def _collide(index: TastiIndex, workload, quick: bool,
         duration = 2.5 if quick else 5.0
 
         def post(specs, budget=None, priority=None, deadline_ms=None,
-                 name=None):
+                 name=None, trace_id=None):
             return client.query(specs, budget=budget, priority=priority,
-                                deadline_ms=deadline_ms)
+                                deadline_ms=deadline_ms, trace_id=trace_id)
 
         report = OpenLoopGenerator(post, mix, process, duration).run()
         for o in report.outcomes:
@@ -135,6 +154,7 @@ def _collide(index: TastiIndex, workload, quick: bool,
             raise AssertionError("heavy scan starved: still running after "
                                  "the interactive train drained")
         stats = client.stats()
+        slow_trace = _slowest_trace(client, report)
     finally:
         server.shutdown()
 
@@ -147,6 +167,7 @@ def _collide(index: TastiIndex, workload, quick: bool,
         "report": report,
         "rows": rows,
         "requests": requests,
+        "slow_trace": slow_trace,
         "fresh_total": stats["accounts"]["fresh_total"],
         "cached_total": stats["accounts"]["cached_total"],
         "scheduler": stats["server"]["scheduler"],
@@ -173,7 +194,8 @@ def _replay(index: TastiIndex, workload,
             "cached_total": snap["cached"]}
 
 
-def bench(quick: bool = False) -> Dict[str, object]:
+def bench(quick: bool = False,
+          trace_out: Optional[str] = None) -> Dict[str, object]:
     n = 2400 if quick else 12000
     wl = make_workload("night-street", n_frames=n)
     index = TastiIndex.build(wl.features, 150 if quick else 400,
@@ -183,6 +205,12 @@ def bench(quick: bool = False) -> Dict[str, object]:
     sched = _collide(index, wl, quick, preempt=True)
     report = sched["report"]
     inter = report.classes["interactive"]
+
+    # written BEFORE the assertions: when the p99 gate trips, the span tree
+    # of the slowest interactive request is exactly the postmortem you want
+    if trace_out and sched["slow_trace"] is not None:
+        with open(trace_out, "w") as f:
+            json.dump(sched["slow_trace"], f, indent=2)
 
     # starvation-freedom, asserted
     if inter["errors"]:
@@ -234,6 +262,10 @@ def bench(quick: bool = False) -> Dict[str, object]:
                        "preemptions":
                            control["scheduler"]["preemptions"]},
         "p99_ceiling_ms": P99_CEILING_MS,
+        "slowest_interactive": None if sched["slow_trace"] is None else {
+            "trace_id": sched["slow_trace"]["trace_id"],
+            "latency_ms": sched["slow_trace"]["latency_ms"],
+        },
     }
 
 
@@ -259,8 +291,13 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default=None,
                     help="also write the measurements as JSON (CI artifact)")
+    ap.add_argument("--trace-out", default=None,
+                    help="dump the slowest interactive request's span tree "
+                         "(flight-recorder postmortem, written before the "
+                         "SLO assertions so a red gate still gets it)")
     args = ap.parse_args(argv)
-    payload = {"quick": args.quick, **bench(args.quick)}
+    payload = {"quick": args.quick,
+               **bench(args.quick, trace_out=args.trace_out)}
     if args.json:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

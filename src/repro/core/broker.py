@@ -38,6 +38,7 @@ well-shaped microbatches.  :class:`OracleBroker` owns exactly that seam:
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
@@ -45,6 +46,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.oracle_pool import OraclePool, OraclePoolClosed
+from repro.obs import NULL_SCOPE, SIZE_BUCKETS
+from repro.obs.trace import span, start_span
 
 
 @dataclass
@@ -111,12 +114,14 @@ class OracleBroker:
     def __init__(self, annotate: Callable[[np.ndarray], Sequence[Any]],
                  max_batch: int = 64,
                  cache: Optional[Dict[int, Any]] = None,
-                 pool: Optional[OraclePool] = None):
+                 pool: Optional[OraclePool] = None,
+                 obs=None):
         if max_batch <= 0:
             raise ValueError(f"max_batch must be positive, got {max_batch}")
         self.annotate = annotate
         self.max_batch = int(max_batch)
         self.pool = pool
+        self.set_obs(obs)
         self.cache: Dict[int, Any] = {} if cache is None else cache
         self._pending: Dict[int, Optional[OracleAccount]] = {}  # id -> owner
         # ids reserved by an in-flight flush (labeled outside the lock);
@@ -140,6 +145,19 @@ class OracleBroker:
             "prefetched": 0,      # ids enqueued via prefetch()
         }
 
+    def set_obs(self, obs) -> None:
+        """Attach an :class:`~repro.obs.ObsScope` (the server wires one per
+        workload).  Resolves the flush histograms once so the hot path
+        never touches the registry; counters stay derived at scrape time
+        from :meth:`observe`."""
+        self._obs = obs if obs is not None else NULL_SCOPE
+        self._h_flush_latency = self._obs.histogram(
+            "oracle_flush_latency_seconds",
+            "wall time of one broker flush (label + publish)")
+        self._h_flush_size = self._obs.histogram(
+            "oracle_flush_size_labels",
+            "fresh labels reserved per flush", buckets=SIZE_BUCKETS)
+
     def account(self, name: str = "") -> OracleAccount:
         acct = OracleAccount(name=name)
         with self._lock:
@@ -160,6 +178,24 @@ class OracleBroker:
             return {**self.stats, "cache_size": len(self.cache),
                     "n_pending": len(self._pending),
                     "n_inflight": len(self._inflight)}
+
+    def observe(self, recent_accounts: int = 32) -> Dict[str, Any]:
+        """Stats *and* the recent per-account counters under ONE lock
+        acquisition, so a scrape racing a flush can't pair totals and
+        account rows from different instants (the publish phase bumps
+        both atomically).  This is what ``/stats`` and the ``/metrics``
+        collector read."""
+        with self._lock:
+            accounts = list(self._accounts)
+            if recent_accounts and len(accounts) > recent_accounts:
+                accounts = accounts[-recent_accounts:]
+            return {
+                "stats": {**self.stats, "cache_size": len(self.cache),
+                          "n_pending": len(self._pending),
+                          "n_inflight": len(self._inflight)},
+                "accounts": [{"name": a.name, "fresh": a.fresh,
+                              "cached": a.cached} for a in accounts],
+            }
 
     # -- persistence hooks ---------------------------------------------------
     def seed(self, labels: Dict[int, Any]) -> int:
@@ -262,7 +298,13 @@ class OracleBroker:
             self.stats["requests"] += len(ids)
         # cache-bypassing reads label OUTSIDE the lock too (same reservation
         # discipline as flush, minus the dedup: every id is re-labeled)
-        labeled, batches = self._label(ids)
+        sp = start_span("broker.fetch_nocache", n=len(ids))
+        try:
+            labeled, batches = self._label(ids)
+        except BaseException as e:
+            sp.set(error=f"{type(e).__name__}: {e}").end()
+            raise
+        sp.set(fresh=len(ids), batches=batches).end()
         with self._lock:
             self.cache.update(labeled)
             self.stats["batches"] += batches
@@ -354,36 +396,47 @@ class OracleBroker:
             if not reserved:
                 return 0
             ids = np.asarray([i for i, _ in reserved], np.int64)
-        try:
-            results, batches = self._label(ids)
-            missing = [i for i, _ in reserved if i not in results]
-            if missing:
-                raise RuntimeError(
-                    f"oracle returned no label for {len(missing)} of "
-                    f"{len(reserved)} flushed ids")
-        except BaseException:
+        # span + histogram cover label->publish; reserve was under the lock.
+        # The span is stack-pushed so the pool's oracle.subbatch spans
+        # parent under THIS flush — one chain per fresh label.
+        t0 = time.perf_counter()
+        with span("broker.flush", reserved=len(reserved),
+                  limit=limit if limit is not None else 0) as sp:
+            try:
+                results, batches = self._label(ids)
+                missing = [i for i, _ in reserved if i not in results]
+                if missing:
+                    raise RuntimeError(
+                        f"oracle returned no label for {len(missing)} of "
+                        f"{len(reserved)} flushed ids")
+            except BaseException as e:
+                sp.set(error=f"{type(e).__name__}: {e}", fresh=0)
+                with self._lock:
+                    # roll the reservation back: nothing was published,
+                    # nothing is charged, and the ids are pending again for
+                    # a retry
+                    for i, owner in reserved:
+                        self._inflight.pop(i, None)
+                        if i not in self.cache and i not in self._pending:
+                            self._pending[i] = owner
+                    self._cond.notify_all()
+                raise
             with self._lock:
-                # roll the reservation back: nothing was published, nothing
-                # is charged, and the ids are pending again for a retry
-                for i, owner in reserved:
+                labeled: Dict[int, Any] = {}
+                for i, owner in reserved:  # publish in pending order
                     self._inflight.pop(i, None)
-                    if i not in self.cache and i not in self._pending:
-                        self._pending[i] = owner
+                    a = results[i]
+                    self.cache[i] = a
+                    labeled[i] = a
+                    self.stats["fresh"] += 1
+                    if owner is not None:
+                        owner.fresh += 1
+                        owner.labeled.append(i)
+                self.stats["batches"] += batches
+                self.stats["flushes"] += 1
+                self._notify_fresh(labeled)
                 self._cond.notify_all()
-            raise
-        with self._lock:
-            labeled: Dict[int, Any] = {}
-            for i, owner in reserved:  # publish in pending (insertion) order
-                self._inflight.pop(i, None)
-                a = results[i]
-                self.cache[i] = a
-                labeled[i] = a
-                self.stats["fresh"] += 1
-                if owner is not None:
-                    owner.fresh += 1
-                    owner.labeled.append(i)
-            self.stats["batches"] += batches
-            self.stats["flushes"] += 1
-            self._notify_fresh(labeled)
-            self._cond.notify_all()
+            sp.set(fresh=len(reserved), batches=batches)
+        self._h_flush_latency.observe(time.perf_counter() - t0)
+        self._h_flush_size.observe(len(reserved))
         return len(reserved)

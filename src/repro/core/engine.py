@@ -42,6 +42,8 @@ from repro.core.index import TastiIndex
 from repro.core.oracle_pool import OraclePool
 from repro.core.queries.registry import QueryExecutor, get_executor
 from repro.core.resident import ResidentIndexState
+from repro.obs import NULL_SCOPE
+from repro.obs.trace import span as trace_span
 
 PROPAGATION_MODES = ("numeric", "top1", "categorical")
 
@@ -175,7 +177,9 @@ class QueryEngine:
                  broker: Optional[OracleBroker] = None,
                  oracle_replicas: int = 1,
                  oracle_pool: Optional[OraclePool] = None,
-                 resident: Optional[bool] = None):
+                 resident: Optional[bool] = None,
+                 obs=None):
+        self.obs = obs if obs is not None else NULL_SCOPE
         self.index = index
         self.workload = workload
         self.crack_by_default = bool(crack)
@@ -187,8 +191,11 @@ class QueryEngine:
         # device-resident rep structures for the fused scoring hot path;
         # `resident=None` auto-enables on accelerators only (see
         # repro.core.resident for the policy and the env override)
-        self.resident = ResidentIndexState(index, enabled=resident)
+        self.resident = ResidentIndexState(index, enabled=resident,
+                                           obs=self.obs)
         self._broker = broker
+        if broker is not None and obs is not None:
+            broker.set_obs(self.obs)
         # oracle sharding: >1 replicas put an OraclePool behind the broker's
         # microbatcher; an externally-owned pool may be passed in instead
         self.oracle_replicas = max(1, int(oracle_replicas))
@@ -202,7 +209,8 @@ class QueryEngine:
                 self._oracle_pool = broker.pool
             elif self._oracle_pool is None and self.oracle_replicas > 1:
                 self._oracle_pool = OraclePool(
-                    self._annotate, n_replicas=self.oracle_replicas)
+                    self._annotate, n_replicas=self.oracle_replicas,
+                    obs=self.obs)
                 self._owns_pool = True
                 broker.pool = self._oracle_pool
             elif self._oracle_pool is not None:
@@ -242,11 +250,13 @@ class QueryEngine:
             if self._broker is None:
                 if self._oracle_pool is None and self.oracle_replicas > 1:
                     self._oracle_pool = OraclePool(
-                        self._annotate, n_replicas=self.oracle_replicas)
+                        self._annotate, n_replicas=self.oracle_replicas,
+                        obs=self.obs)
                     self._owns_pool = True
                 self._broker = OracleBroker(self._annotate,
                                             max_batch=self.max_oracle_batch,
-                                            pool=self._oracle_pool)
+                                            pool=self._oracle_pool,
+                                            obs=self.obs)
             return self._broker
 
     @property
@@ -266,7 +276,7 @@ class QueryEngine:
                     n == 1 or self._oracle_pool is not None):
                 return
             old = self._oracle_pool if self._owns_pool else None
-            pool = (OraclePool(self._annotate, n_replicas=n)
+            pool = (OraclePool(self._annotate, n_replicas=n, obs=self.obs)
                     if n > 1 else None)
             self.oracle_replicas = n
             self._oracle_pool = pool
@@ -289,6 +299,20 @@ class QueryEngine:
                 self._broker.pool = None
         if pool is not None:
             pool.close()
+
+    def set_obs(self, obs) -> None:
+        """Adopt an :class:`~repro.obs.ObsScope` after construction (the
+        server wires a per-workload scope into engines registered before it
+        existed) and push it into the broker/pool/resident the engine
+        already built."""
+        self.obs = obs if obs is not None else NULL_SCOPE
+        with self._lock:
+            broker, pool = self._broker, self._oracle_pool
+        if broker is not None:
+            broker.set_obs(self.obs)
+        if pool is not None:
+            pool.set_obs(self.obs)
+        self.resident.set_obs(self.obs)
 
     def add_stats(self, **deltas: int) -> None:
         """Atomically bump engine counters (dict ``+=`` is not)."""
@@ -374,13 +398,17 @@ class QueryEngine:
                     owner = False
                     self.stats["proxy_flight_waits"] += 1
             if not owner:
-                flight.wait()
+                with trace_span("proxy.flight_wait", mode=mode):
+                    flight.wait()
                 continue      # cache hit, or recompute if the owner lost
             try:
-                rep_scores = np.asarray([fn(a) for a in annotations],
-                                        np.float64)
-                out = self._propagate(rep_scores, topk_ids, topk_d2,
-                                      mode, n_classes, version)
+                with trace_span("proxy.materialize", mode=mode) as sp:
+                    rep_scores = np.asarray([fn(a) for a in annotations],
+                                            np.float64)
+                    out, source = self._propagate(
+                        rep_scores, topk_ids, topk_d2, mode, n_classes,
+                        version)
+                    sp.set(source=source, n=len(out))
             except BaseException:
                 with self._lock:
                     self._proxy_flights.pop(key, None)
@@ -397,23 +425,26 @@ class QueryEngine:
 
     def _propagate(self, rep_scores: np.ndarray, topk_ids: np.ndarray,
                    topk_d2: np.ndarray, mode: str, n_classes: Optional[int],
-                   version: int) -> np.ndarray:
+                   version: int):
         """One propagation over a snapshot: fused device call when resident
         scoring is on (falling back on a mid-compute crack or device error),
-        float64 numpy otherwise."""
+        float64 numpy otherwise.  Returns ``(scores, source)`` with source
+        in {"device", "host"} for span attribution."""
         if self.resident.enabled:
             out = self.resident.propagate(rep_scores, mode, version=version,
                                           n_classes=n_classes)
             if out is not None:
                 self.add_stats(proxy_device_computes=1)
-                return out
+                return out, "device"
         if mode == "numeric":
-            return propagation.propagate_numeric(rep_scores, topk_ids, topk_d2)
+            return propagation.propagate_numeric(
+                rep_scores, topk_ids, topk_d2), "host"
         if mode == "top1":
-            return propagation.propagate_top1(rep_scores, topk_ids, topk_d2)
+            return propagation.propagate_top1(
+                rep_scores, topk_ids, topk_d2), "host"
         return propagation.propagate_categorical(
             rep_scores, topk_ids, topk_d2,
-            n_classes=n_classes).astype(np.float64)
+            n_classes=n_classes).astype(np.float64), "host"
 
     # -- oracle with the shared label cache ----------------------------------
     def _make_oracle(self, score_fn: Callable, reuse: bool,
@@ -536,12 +567,16 @@ class QueryEngine:
                                    checkpoint=checkpoint,
                                    slice_size=slice_size)
 
-        raw = plan.executor.execute(plan, proxy, oracle)
-        summary = plan.executor.summarize(raw)
+        with trace_span("spec.execute", kind=plan.kind) as sp:
+            raw = plan.executor.execute(plan, proxy, oracle)
+            summary = plan.executor.summarize(raw)
+            sp.set(fresh=acct.fresh - fresh0, cached=acct.cached - cached0)
 
         n_cracked = 0
         if plan.crack and acct.labeled:
-            n_cracked = self.crack_with(acct.labeled)
+            with trace_span("engine.crack") as sp:
+                n_cracked = self.crack_with(acct.labeled)
+                sp.set(added=n_cracked)
             plan.trace.append(f"cracked {n_cracked} new reps into the index")
 
         # session-prefetched labels were already folded into engine.stats by

@@ -41,7 +41,15 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_SCOPE
+from repro.obs.trace import add_timed_span
+
 _STOP = object()
+
+# weight of the newest sub-batch in the per-replica latency EWMA; ~0.2
+# averages over the last ~5 sub-batches — reactive enough for
+# latency-aware sizing, stable enough to ignore one-off stalls
+_EWMA_ALPHA = 0.2
 
 
 class OraclePoolError(RuntimeError):
@@ -60,7 +68,7 @@ class _FlushJob:
     the pool's task queue; each job completes independently."""
 
     __slots__ = ("chunks", "tried", "results", "batches", "remaining",
-                 "error", "cond")
+                 "error", "cond", "timings")
 
     def __init__(self, chunks: List[np.ndarray]):
         self.chunks = chunks
@@ -71,6 +79,9 @@ class _FlushJob:
         self.remaining = len(chunks)
         self.error: Optional[BaseException] = None
         self.cond = threading.Condition()
+        # (replica, t0, t1, n_ids) per completed sub-batch — the caller
+        # turns these into trace spans after the job finishes
+        self.timings: List[Tuple[int, float, float, int]] = []
 
 
 class OraclePool:
@@ -88,7 +99,8 @@ class OraclePool:
     def __init__(self, annotate: Optional[Callable] = None,
                  n_replicas: int = 2, *,
                  replicas: Optional[Sequence[Callable]] = None,
-                 oversub: int = 2, name: str = "oracle-replica"):
+                 oversub: int = 2, name: str = "oracle-replica",
+                 obs=None):
         if replicas is None:
             if annotate is None:
                 raise ValueError("OraclePool needs `annotate` or `replicas`")
@@ -114,13 +126,29 @@ class OraclePool:
             "failures": 0,       # annotate() calls that raised
             "per_replica": [0] * self.n_replicas,          # completed batches
             "per_replica_failures": [0] * self.n_replicas,
+            # sub-batches a replica worked beyond its fair share of a job
+            # (it stole them from a slower sibling's backlog)
+            "steals": 0,
+            # EWMA of per-sub-batch wall time, per replica — the signal the
+            # ROADMAP's latency-aware sub-batch sizing will consume
+            "per_replica_latency_ewma_s": [0.0] * self.n_replicas,
         }
+        self.set_obs(obs)
         self._threads = [
             threading.Thread(target=self._worker, args=(ridx, fn),
                              name=f"{name}-{ridx}", daemon=True)
             for ridx, fn in enumerate(replicas)]
         for t in self._threads:
             t.start()
+
+    def set_obs(self, obs) -> None:
+        """Attach an :class:`~repro.obs.ObsScope`; resolves the sub-batch
+        latency histogram once (workers observe it lock-free on the
+        registry side)."""
+        self._obs = obs if obs is not None else NULL_SCOPE
+        self._h_sub = self._obs.histogram(
+            "oracle_subbatch_latency_seconds",
+            "wall time of one replica sub-batch (annotate call)")
 
     # -- sharding ------------------------------------------------------------
     def chunk_size(self, n: int, max_batch: int) -> int:
@@ -158,7 +186,22 @@ class OraclePool:
                     job.cond.wait()
                 if job.error is not None:
                     raise job.error
-                return dict(job.results), job.batches
+                timings = list(job.timings)
+                results, batches = dict(job.results), job.batches
+            # post-completion bookkeeping: replica sub-batch spans on the
+            # caller's trace, and steal counting (work a replica did beyond
+            # its fair 1/n share of this job's sub-batches)
+            per_job = [0] * self.n_replicas
+            for ridx, t0, t1, n in timings:
+                per_job[ridx] += 1
+                add_timed_span("oracle.subbatch", t0, t1,
+                               replica=ridx, n=n)
+            fair = ceil(len(chunks) / self.n_replicas)
+            stolen = sum(max(0, c - fair) for c in per_job)
+            if stolen:
+                with self._lock:
+                    self.stats["steals"] += stolen
+            return results, batches
         finally:
             with self._lock:
                 self._active -= 1
@@ -186,6 +229,7 @@ class OraclePool:
                 time.sleep(0.01)
                 continue
             chunk = job.chunks[ci]
+            t0 = time.perf_counter()
             try:
                 anns = annotate(chunk)
                 if len(anns) != len(chunk):
@@ -209,16 +253,23 @@ class OraclePool:
                     self.stats["retries"] += 1
                 self._tasks.put(task)
                 continue
+            t1 = time.perf_counter()
             with job.cond:
                 for i, a in zip(chunk, anns):
                     job.results[int(i)] = a
                 job.batches += 1
                 job.remaining -= 1
+                job.timings.append((ridx, t0, t1, len(chunk)))
                 if job.remaining == 0:
                     job.cond.notify_all()
             with self._lock:
                 self.stats["batches"] += 1
                 self.stats["per_replica"][ridx] += 1
+                ewma = self.stats["per_replica_latency_ewma_s"]
+                prev = ewma[ridx]
+                ewma[ridx] = (t1 - t0) if prev == 0.0 else \
+                    prev + _EWMA_ALPHA * ((t1 - t0) - prev)
+            self._h_sub.observe(t1 - t0)
 
     # -- lifecycle -----------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
@@ -227,6 +278,8 @@ class OraclePool:
             out = dict(self.stats)
             out["per_replica"] = list(out["per_replica"])
             out["per_replica_failures"] = list(out["per_replica_failures"])
+            out["per_replica_latency_ewma_s"] = [
+                round(v, 6) for v in out["per_replica_latency_ewma_s"]]
             out["n_replicas"] = self.n_replicas
             return out
 

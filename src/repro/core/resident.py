@@ -54,7 +54,7 @@ class ResidentIndexState:
     """
 
     def __init__(self, index, enabled: Optional[bool] = None,
-                 block_n: int = 256):
+                 block_n: int = 256, obs=None):
         self.index = index
         self.enabled = _default_enabled() if enabled is None else bool(enabled)
         self.block_n = int(block_n)
@@ -63,6 +63,18 @@ class ResidentIndexState:
         self._topk_ids = None                 # device (N,k) int32
         self._topk_d2 = None                  # device (N,k) float32
         self._embeddings = None               # device (N,d); crack-immutable
+        self.stats = {
+            "uploads": 0,        # rep-structure uploads (initial + re-upload)
+            "invalidations": 0,  # crack listeners dropping device state
+            "fallbacks": 0,      # propagate() calls answered by the host path
+        }
+        self.set_obs(obs)
+
+    def set_obs(self, obs) -> None:
+        """Attach an :class:`~repro.obs.ObsScope` (counters here stay in
+        ``self.stats`` and are exported at scrape time; nothing to resolve
+        eagerly — kept for interface symmetry with broker/pool)."""
+        self._obs = obs
 
     # ------------------------------------------------------------------
     def invalidate(self) -> None:
@@ -70,6 +82,8 @@ class ResidentIndexState:
         never depends on this — :meth:`propagate` version-checks every call —
         but dropping eagerly frees device memory for the re-upload."""
         with self._lock:
+            if self._version is not None or self._topk_ids is not None:
+                self.stats["invalidations"] += 1
             self._version = None
             self._topk_ids = None
             self._topk_d2 = None
@@ -96,6 +110,7 @@ class ResidentIndexState:
                 self._topk_d2 = jnp.asarray(
                     np.asarray(self.index.topk_d2, np.float32))
                 self._version = version
+                self.stats["uploads"] += 1
             return self._topk_ids, self._topk_d2
 
     # ------------------------------------------------------------------
@@ -108,8 +123,10 @@ class ResidentIndexState:
         last also disables the resident path for the rest of the process).
         """
         if not self.enabled:
+            self.stats["fallbacks"] += 1
             return None
         if self.index.version != version:
+            self.stats["fallbacks"] += 1
             return None          # crack landed since the caller snapshotted
         try:
             import jax.numpy as jnp
@@ -121,6 +138,7 @@ class ResidentIndexState:
             return np.asarray(out, np.float64)
         except Exception as e:                      # pragma: no cover - defensive
             self.enabled = False
+            self.stats["fallbacks"] += 1
             self.invalidate()
             warnings.warn("device-resident proxy scoring failed "
                           f"({type(e).__name__}: {e}); falling back to the "

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.broker import OracleAccount
 from repro.core.engine import QueryEngine, QueryPlan, QueryResult, QuerySpec
+from repro.obs.trace import span as trace_span
 
 
 def stratified_order(proxy: np.ndarray, n_strata: int = 10,
@@ -259,32 +260,36 @@ class QuerySession:
 
         prefetch_fresh = 0
         if self.prefetch and engine.workload is not None:
-            enqueued = 0
-            for i, plan in enumerate(sp.plans):
-                if plan.spec.reuse_labels:
-                    # cache-bypassing specs pay full freight (no prefetch)
-                    ids = plan.executor.preview(plan, engine.proxy_for(plan))
-                    enqueued += broker.prefetch(ids, accounts[i])
-                if plan.crack:
-                    # a crack re-propagates every later spec's proxy, so
-                    # their previews would prefetch stale ids — let them
-                    # fetch on demand (still deduped and microbatched)
-                    sp.trace.append(
-                        f"spec {i} cracks: later specs fetch on demand")
-                    break
-            # account-based delta, not a broker.stats delta: a concurrent
-            # session's flush in this window must not inflate our count
-            fresh0 = sum(a.fresh for a in accounts)
-            if self.checkpoint is None:
-                broker.flush()
-            else:
-                # preemptible prefetch: flush in slice-sized steps so the
-                # scheduler can run higher-priority work between them (per-id
-                # charging makes the step sequence byte-identical to a drain)
-                self.checkpoint()
-                while broker.flush(limit=self.slice_size):
+            with trace_span("session.prefetch") as psp:
+                enqueued = 0
+                for i, plan in enumerate(sp.plans):
+                    if plan.spec.reuse_labels:
+                        # cache-bypassing specs pay full freight (no prefetch)
+                        ids = plan.executor.preview(plan,
+                                                    engine.proxy_for(plan))
+                        enqueued += broker.prefetch(ids, accounts[i])
+                    if plan.crack:
+                        # a crack re-propagates every later spec's proxy, so
+                        # their previews would prefetch stale ids — let them
+                        # fetch on demand (still deduped and microbatched)
+                        sp.trace.append(
+                            f"spec {i} cracks: later specs fetch on demand")
+                        break
+                # account-based delta, not a broker.stats delta: a concurrent
+                # session's flush in this window must not inflate our count
+                fresh0 = sum(a.fresh for a in accounts)
+                if self.checkpoint is None:
+                    broker.flush()
+                else:
+                    # preemptible prefetch: flush in slice-sized steps so the
+                    # scheduler can run higher-priority work between them
+                    # (per-id charging makes the step sequence byte-identical
+                    # to a drain)
                     self.checkpoint()
-            prefetch_fresh = sum(a.fresh for a in accounts) - fresh0
+                    while broker.flush(limit=self.slice_size):
+                        self.checkpoint()
+                prefetch_fresh = sum(a.fresh for a in accounts) - fresh0
+                psp.set(enqueued=enqueued, fresh=prefetch_fresh)
             # execute() only folds post-entry deltas into engine.stats, so
             # the prefetch phase records its labels here
             engine.add_stats(label_fresh=prefetch_fresh)

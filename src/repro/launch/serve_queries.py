@@ -39,6 +39,7 @@ import os
 import sys
 
 from repro.core.schema import WORKLOAD_NAMES
+from repro.obs import Observability
 from repro.serve.registry import WorkloadRegistry, WorkloadSpec
 from repro.serve.server import QueryServer
 
@@ -162,6 +163,13 @@ def main(argv=None) -> None:
     ap.add_argument("--store-dir", default=None,
                     help="directory for per-workload label stores, one "
                          "<dir>/<name> stem each (multi-workload form)")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable observability (tracing, /metrics, the "
+                         "flight recorder); default: enabled — overhead is "
+                         "bounded by the obs_overhead benchmark gate")
+    ap.add_argument("--trace-buffer", type=int, default=256,
+                    help="completed request traces the flight recorder "
+                         "retains for /debug/traces postmortems")
     args = ap.parse_args(argv)
 
     if args.manifest:
@@ -224,12 +232,15 @@ def main(argv=None) -> None:
                 raise SystemExit(
                     f"cannot load workload {name!r}: {e}") from None
 
+    obs = Observability(enabled=not args.no_obs,
+                        trace_buffer=args.trace_buffer)
     server = QueryServer(registry, host=args.host, port=args.port,
                          admission_window=args.admission_window,
                          max_workers=args.max_workers,
                          shares=shares, workload_caps=caps,
                          preempt=not args.no_preempt,
-                         preempt_slice=args.preempt_slice).start()
+                         preempt_slice=args.preempt_slice,
+                         obs=obs).start()
     # per-workload oracle_replicas/records/store truth lives in describe()
     print(json.dumps({"serving": server.url,
                       "default_workload": registry.default,

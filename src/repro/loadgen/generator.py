@@ -10,10 +10,19 @@ slow harness cannot masquerade as a slow server.
 
 ``post`` is any callable ``(specs, budget, priority, deadline_ms, name) ->
 object``; an exception marks the request failed and its message is kept.
-The report aggregates per class: counts, error counts, p50/p90/p99 latency.
+Errors are classified by kind — ``connect`` (``OSError``: refused,
+reset, timeout — the client never got an answer), ``http_4xx``/``http_5xx``
+(an exception carrying an integer ``status`` attribute, e.g.
+:class:`repro.serve.client.ServerError`), ``other`` — so server-side faults
+are not hidden behind client connectivity noise.  A ``post`` that accepts a
+``trace_id`` keyword gets one per request (stamped on the outcome too), tying
+every fired request to its server-side span tree in the flight recorder.
+The report aggregates per class: counts, error counts by kind, p50/p90/p99
+latency.
 """
 from __future__ import annotations
 
+import inspect
 import threading
 import time
 from dataclasses import dataclass, field
@@ -23,8 +32,20 @@ import numpy as np
 
 from repro.loadgen.arrivals import ArrivalProcess
 from repro.loadgen.mix import SpecMix
+from repro.obs.trace import new_trace_id
 
 PostFn = Callable[..., Any]
+
+
+def _accepts_kwarg(fn: Callable, name: str) -> bool:
+    """Does ``fn`` accept ``name`` as a keyword (directly or via **kw)?
+    Inspected once at construction so old post callables keep working."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / C callables: don't risk it
+        return False
+    return name in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
 
 
 @dataclass
@@ -36,6 +57,8 @@ class RequestOutcome:
     done_s: float = 0.0             # when the response (or error) landed
     ok: bool = False
     error: Optional[str] = None
+    error_kind: Optional[str] = None  # connect | http_4xx | http_5xx | other
+    trace_id: Optional[str] = None    # stamped when post accepts trace_id
     response: Any = None
 
     @property
@@ -47,6 +70,19 @@ class RequestOutcome:
     def fire_lag_s(self) -> float:
         """Harness jitter: how late the thread fired vs the schedule."""
         return self.fired_s - self.scheduled_s
+
+
+def _classify_error(e: Exception) -> str:
+    """connect (no answer) vs http_4xx/http_5xx (the server answered with a
+    failure status, exposed via an integer ``status`` attr) vs other.
+    ``status`` is checked first: an HTTP-status-carrying error that happens
+    to subclass OSError is still a *server* answer, not connectivity."""
+    status = getattr(e, "status", None)
+    if isinstance(status, int) and not isinstance(status, bool):
+        return "http_4xx" if 400 <= status < 500 else "http_5xx"
+    if isinstance(e, OSError):
+        return "connect"
+    return "other"
 
 
 def _percentiles(values_ms: List[float]) -> Dict[str, float]:
@@ -64,7 +100,9 @@ class LoadReport:
     duration_s: float
     offered: int                              # scheduled arrivals
     completed: int
-    errors: int
+    errors: int                               # total (sum of the kinds)
+    connect_errors: int                       # never reached the server
+    http_errors: int                          # server answered 4xx/5xx
     max_fire_lag_ms: float                    # harness health, not server's
     classes: Dict[str, Dict[str, float]]      # per-class n/ok/errors/pXX_ms
     outcomes: List[RequestOutcome] = field(repr=False, default_factory=list)
@@ -90,6 +128,7 @@ class OpenLoopGenerator:
         self.mix = mix
         self.process = process
         self.duration_s = float(duration_s)
+        self._post_takes_trace = _accepts_kwarg(post, "trace_id")
 
     def run(self) -> LoadReport:
         offsets = self.process.times(self.duration_s)
@@ -109,14 +148,17 @@ class OpenLoopGenerator:
             if delay > 0:
                 time.sleep(delay)
             out.fired_s = time.monotonic() - t0
+            kwargs = dict(budget=budget, priority=cls.priority,
+                          deadline_ms=cls.deadline_ms, name=cls.name)
+            if self._post_takes_trace:
+                out.trace_id = new_trace_id()
+                kwargs["trace_id"] = out.trace_id
             try:
-                out.response = self.post(specs, budget=budget,
-                                         priority=cls.priority,
-                                         deadline_ms=cls.deadline_ms,
-                                         name=cls.name)
+                out.response = self.post(specs, **kwargs)
                 out.ok = True
             except Exception as e:  # noqa: BLE001 - outcome, not crash
                 out.error = f"{type(e).__name__}: {e}"
+                out.error_kind = _classify_error(e)
             out.done_s = time.monotonic() - t0
 
         for i in range(len(plan)):
@@ -127,6 +169,9 @@ class OpenLoopGenerator:
         for t in threads:
             t.join()
 
+        def _kind_count(who: List[RequestOutcome], *kinds: str) -> int:
+            return sum(o.error_kind in kinds for o in who if not o.ok)
+
         classes: Dict[str, Dict[str, float]] = {}
         for cls in self.mix.classes:
             mine = [o for o in outcomes if o.name == cls.name]
@@ -135,6 +180,8 @@ class OpenLoopGenerator:
                 "n": len(mine),
                 "ok": len(ok),
                 "errors": len(mine) - len(ok),
+                "connect_errors": _kind_count(mine, "connect"),
+                "http_errors": _kind_count(mine, "http_4xx", "http_5xx"),
                 **_percentiles([o.latency_s * 1e3 for o in ok]),
             }
         return LoadReport(
@@ -142,6 +189,8 @@ class OpenLoopGenerator:
             offered=len(plan),
             completed=sum(o.ok for o in outcomes),
             errors=sum(not o.ok for o in outcomes),
+            connect_errors=_kind_count(outcomes, "connect"),
+            http_errors=_kind_count(outcomes, "http_4xx", "http_5xx"),
             max_fire_lag_ms=round(max(
                 (o.fire_lag_s * 1e3 for o in outcomes), default=0.0), 3),
             classes=classes,

@@ -32,9 +32,18 @@ import urllib.error
 import urllib.request
 from typing import Any, Dict, List, Optional
 
+from repro.obs import parse_prometheus_text, series_key
+
 
 class ServerError(RuntimeError):
-    """Non-2xx response from the query server (message = server's error)."""
+    """Non-2xx response from the query server (message = server's error).
+    ``status`` carries the HTTP status code, so callers (the load
+    generator's error-kind split) can tell a 4xx rejection from a 5xx
+    server fault without string matching."""
+
+    def __init__(self, message: str, status: Optional[int] = None):
+        super().__init__(message)
+        self.status = status
 
 
 class ConnectRetriesExhausted(OSError):
@@ -68,7 +77,7 @@ class QueryClient:
 
     def _call(self, path: str, payload: Optional[Any] = None,
               method: Optional[str] = None,
-              retry_refused: bool = True) -> Dict[str, Any]:
+              retry_refused: bool = True, raw: bool = False) -> Any:
         data = None if payload is None else json.dumps(payload).encode()
         req = urllib.request.Request(
             self.url + path, data=data,
@@ -82,13 +91,15 @@ class QueryClient:
             attempts += 1
             try:
                 with urllib.request.urlopen(req, timeout=self.timeout) as resp:
-                    return json.loads(resp.read().decode())
+                    body = resp.read().decode()
+                    return body if raw else json.loads(body)
             except urllib.error.HTTPError as e:
                 try:
                     detail = json.loads(e.read().decode()).get("error", str(e))
                 except Exception:  # noqa: BLE001 - best-effort error detail
                     detail = str(e)
-                raise ServerError(f"{path}: {detail}") from None
+                raise ServerError(f"{path}: {detail}",
+                                  status=e.code) from None
             except urllib.error.URLError as e:
                 # the server may simply not have bound its port yet: retry
                 # connection-refused with jittered exponential backoff (full
@@ -109,17 +120,21 @@ class QueryClient:
     def query(self, specs: List[Any], budget: Optional[int] = None,
               workload: Optional[str] = None,
               priority: Optional[int] = None,
-              deadline_ms: Optional[float] = None) -> Dict[str, Any]:
+              deadline_ms: Optional[float] = None,
+              trace_id: Optional[str] = None) -> Dict[str, Any]:
         """POST specs (dicts or ``QuerySpec`` s); returns the response JSON:
-        ``results`` (per-spec rows), ``session``, and ``request`` totals.
-        ``workload`` routes the whole request to one mounted workload
-        (specs may carry their own ``workload`` field instead);
-        ``priority`` (0 = most urgent) and ``deadline_ms`` (relative to
-        arrival) place the request in the server's scheduling order."""
+        ``results`` (per-spec rows), ``session``, and ``request`` totals
+        (including the request's ``trace_id``).  ``workload`` routes the
+        whole request to one mounted workload (specs may carry their own
+        ``workload`` field instead); ``priority`` (0 = most urgent) and
+        ``deadline_ms`` (relative to arrival) place the request in the
+        server's scheduling order; ``trace_id`` names the request's trace
+        (else the server generates one)."""
         raw = [s if isinstance(s, dict) else s.to_dict() for s in specs]
         body: Any = raw
         extras = {"budget": budget, "workload": workload,
-                  "priority": priority, "deadline_ms": deadline_ms}
+                  "priority": priority, "deadline_ms": deadline_ms,
+                  "trace_id": trace_id}
         extras = {k: v for k, v in extras.items() if v is not None}
         if extras:
             body = {"specs": raw, **extras}
@@ -127,6 +142,25 @@ class QueryClient:
 
     def stats(self) -> Dict[str, Any]:
         return self._call("/stats")
+
+    def metrics(self) -> str:
+        """The raw ``/metrics`` Prometheus text exposition."""
+        return self._call("/metrics", raw=True)
+
+    def traces(self, trace_id: Optional[str] = None,
+               fmt: Optional[str] = None,
+               limit: Optional[int] = None) -> Dict[str, Any]:
+        """``/debug/traces``: recent summaries, or one full trace by id
+        (``fmt="chrome"`` for a chrome://tracing-loadable document)."""
+        params = []
+        if trace_id is not None:
+            params.append(f"id={trace_id}")
+        if fmt is not None:
+            params.append(f"format={fmt}")
+        if limit is not None:
+            params.append(f"limit={int(limit)}")
+        query = "?" + "&".join(params) if params else ""
+        return self._call("/debug/traces" + query)
 
     def workloads(self) -> Dict[str, Any]:
         """What the server has mounted: ``{"default": ..., "workloads":
@@ -189,6 +223,16 @@ def main(argv=None) -> None:
     ap.add_argument("--expect-fresh", type=int, default=None,
                     help="exit non-zero unless the request's fresh-label "
                          "total equals this (CI assertion)")
+    ap.add_argument("--dump-trace", default=None, metavar="PATH",
+                    help="after the query, fetch its trace from "
+                         "/debug/traces and write it as a Chrome trace-"
+                         "event JSON file (load in chrome://tracing)")
+    ap.add_argument("--check-metrics", action="store_true",
+                    help="scrape /metrics before and after the query; "
+                         "exit non-zero unless the exposition parses and "
+                         "the workload's oracle_fresh_total advanced by "
+                         "exactly the request's fresh count (assumes no "
+                         "concurrent traffic, as in the CI smoke)")
     args = ap.parse_args(argv)
 
     client = QueryClient(args.url, connect_wait=args.connect_wait)
@@ -203,6 +247,8 @@ def main(argv=None) -> None:
         specs.append(json.loads(s))
 
     if specs:
+        before = parse_prometheus_text(client.metrics()) \
+            if args.check_metrics else None
         out = client.query(specs, budget=args.budget, workload=args.workload,
                            priority=args.priority,
                            deadline_ms=args.deadline_ms)
@@ -213,8 +259,38 @@ def main(argv=None) -> None:
                 print(f"expected {args.expect_fresh} fresh labels, got {got}",
                       file=sys.stderr)
                 sys.exit(1)
+        if args.check_metrics:
+            after = parse_prometheus_text(client.metrics())
+            if not after:
+                print("/metrics exposition is empty or unparseable",
+                      file=sys.stderr)
+                sys.exit(1)
+            key = series_key("oracle_fresh_total",
+                             workload=out["request"]["workload"])
+            delta = after.get(key, 0.0) - before.get(key, 0.0)
+            fresh = out["request"]["fresh"]
+            if int(delta) != fresh:
+                print(f"{key} advanced by {int(delta)} but the request "
+                      f"paid {fresh} fresh labels", file=sys.stderr)
+                sys.exit(1)
+            print(f"[client] /metrics ok: {len(after)} series, "
+                  f"{key} +{int(delta)} == request fresh", file=sys.stderr)
+        if args.dump_trace:
+            trace_id = out["request"].get("trace_id")
+            if not trace_id:
+                print("no trace_id in the response (server observability "
+                      "disabled?); cannot --dump-trace", file=sys.stderr)
+                sys.exit(1)
+            doc = client.traces(trace_id=trace_id, fmt="chrome")
+            with open(args.dump_trace, "w") as f:
+                json.dump(doc, f)
+            print(f"[client] trace {trace_id} "
+                  f"({len(doc.get('traceEvents', []))} spans) -> "
+                  f"{args.dump_trace}", file=sys.stderr)
     elif args.expect_fresh is not None:
         ap.error("--expect-fresh needs --spec/--specs-file")
+    elif args.check_metrics or args.dump_trace:
+        ap.error("--check-metrics/--dump-trace need --spec/--specs-file")
 
     if args.list_workloads or args.expect_workloads:
         wls = client.workloads()

@@ -39,6 +39,7 @@ from typing import Any, Dict, List, Optional
 from repro.core.engine import QueryEngine
 from repro.core.index import TastiIndex
 from repro.core.schema import WORKLOAD_NAMES, make_workload
+from repro.obs import Observability
 from repro.serve.store import LabelStore
 
 #: Name the single-engine (legacy) server wraps its one workload under.
@@ -102,7 +103,8 @@ class WorkloadEntry:
 
     def __init__(self, name: str, spec: Optional[WorkloadSpec] = None,
                  engine: Optional[QueryEngine] = None,
-                 store: Optional[LabelStore] = None):
+                 store: Optional[LabelStore] = None,
+                 obs: Optional[Observability] = None):
         self.name = name
         self.spec = spec
         self.engine = engine
@@ -110,6 +112,18 @@ class WorkloadEntry:
         self.seeded = 0                      # labels seeded from the store
         self._lock = threading.Lock()        # serializes this entry's load
         self._load_error: Optional[Exception] = None
+        self._obs: Optional[Observability] = None
+        if obs is not None:
+            self.adopt_obs(obs)
+
+    def adopt_obs(self, obs: Observability) -> None:
+        """Point this entry's stack at ``obs`` (metrics + tracing), labeling
+        everything with ``workload=<name>``.  Safe before or after load: an
+        unloaded entry remembers the scope for :meth:`_load`, a loaded one
+        (pre-built engines mounted via ``register``) is re-pointed live."""
+        self._obs = obs
+        if self.engine is not None:
+            self.engine.set_obs(obs.scoped(workload=self.name))
 
     @property
     def loaded(self) -> bool:
@@ -182,9 +196,12 @@ class WorkloadEntry:
                                    n_reps=spec.n_reps, k=spec.k,
                                    triplet_steps=spec.triplet_steps)
             index = build_tasti(wl, cfg, variant=spec.variant).index
+        scope = (self._obs.scoped(workload=self.name)
+                 if self._obs is not None else None)
         engine = QueryEngine(index, wl, crack=spec.crack,
                              max_oracle_batch=spec.oracle_batch,
-                             oracle_replicas=spec.oracle_replicas)
+                             oracle_replicas=spec.oracle_replicas,
+                             obs=scope)
         store = None
         store_stem = spec.store or spec.index
         if store_stem:
@@ -234,6 +251,15 @@ class WorkloadRegistry:
         self._entries: Dict[str, WorkloadEntry] = {}
         self._default = default
         self._lock = threading.Lock()
+        self._obs: Optional[Observability] = None
+
+    def set_obs(self, obs: Observability) -> None:
+        """Adopt every mounted entry (and all future mounts) into ``obs``."""
+        with self._lock:
+            self._obs = obs
+            entries = list(self._entries.values())
+        for entry in entries:
+            entry.adopt_obs(obs)
 
     # -- mounting ------------------------------------------------------------
     def _add(self, entry: WorkloadEntry) -> WorkloadEntry:
@@ -241,6 +267,9 @@ class WorkloadRegistry:
             if entry.name in self._entries:
                 raise ValueError(f"workload {entry.name!r} already mounted")
             self._entries[entry.name] = entry
+            obs = self._obs
+        if obs is not None:
+            entry.adopt_obs(obs)
         return entry
 
     def register(self, name: str, engine: QueryEngine,

@@ -54,6 +54,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.obs import NULL_SCOPE
+from repro.obs.trace import add_timed_span
+
 #: Scheduling class for specs/requests that do not set one.  Lower is more
 #: urgent; 0 is the conventional interactive class, leaving room on both
 #: sides of the default.
@@ -100,6 +103,7 @@ class _WorkloadSched:
     active: int = 0
     stats: Dict[str, float] = field(
         default_factory=lambda: dict.fromkeys(_WL_KEYS, 0))
+    h_wait: Any = None  # sched_queue_wait_seconds{workload=...} histogram
 
 
 class QueryScheduler:
@@ -126,12 +130,22 @@ class QueryScheduler:
                  caps: Optional[Dict[str, int]] = None,
                  admission_window: float = 0.0,
                  preempt: bool = True,
-                 preempt_slice: Optional[int] = None):
+                 preempt_slice: Optional[int] = None,
+                 obs=None):
         if max_workers < 1:
             raise ValueError(f"max_workers must be >= 1, got {max_workers}")
         self._load = load
         self._run = run
         self._fail = fail
+        self._obs = obs if obs is not None else NULL_SCOPE
+        # one counter child per grant reason, resolved once (lock-cheap inc
+        # is the only hot-path cost; disabled obs makes these no-ops)
+        self._c_grants = {
+            reason: self._obs.counter(
+                "sched_grants_total",
+                help="slot grants by reason (first|resume|drain)",
+                reason=reason)
+            for reason in ("first", "resume", "drain")}
         self.max_workers = int(max_workers)
         self.admission_window = float(admission_window)
         self.preempt = bool(preempt)
@@ -169,6 +183,10 @@ class QueryScheduler:
         ws = self._wl.get(name)
         if ws is None:
             ws = self._wl[name] = _WorkloadSched()
+            ws.h_wait = self._obs.histogram(
+                "sched_queue_wait_seconds",
+                help="enqueue-to-first-grant wait per workload",
+                workload=name)
         return ws
 
     def _best(self, now: float) -> Optional[ScheduledTask]:
@@ -214,6 +232,9 @@ class QueryScheduler:
         if task.state == "paused":
             self._n_paused -= 1
         task.state = "running"
+        reason = ("drain" if self._draining
+                  else "resume" if task.started else "first")
+        self._c_grants[reason].inc()
         if not task.started:
             task.started = True
             task.first_grant_at = now
@@ -244,6 +265,8 @@ class QueryScheduler:
         ws.stats["waits"] += 1
         ws.stats["wait_total_s"] += wait
         ws.stats["wait_max_s"] = max(ws.stats["wait_max_s"], wait)
+        if ws.h_wait is not None:
+            ws.h_wait.observe(wait)
 
     # -- task lifecycle ------------------------------------------------------
     def submit(self, task: ScheduledTask) -> ScheduledTask:
@@ -370,7 +393,10 @@ class QueryScheduler:
             self._running_tasks.discard(task)
             self._waiting.append(task)
             self._cond.notify_all()
+        t0 = time.perf_counter()
         self._acquire(task)  # started tasks always resume (never shed)
+        add_timed_span("sched.preempt_pause", t0, time.perf_counter(),
+                       workload=task.workload, preemption=task.preemptions)
 
     # -- lifecycle -----------------------------------------------------------
     def shutdown(self, wait: bool = True, timeout: float = 30.0) -> None:

@@ -41,7 +41,22 @@ Endpoints (all JSON):
 * ``GET /workloads`` — what is mounted: per workload name, default flag,
   loaded state, records/reps, store size, request count;
 * ``GET /healthz`` — readiness probe (with per-workload loaded flags);
+* ``GET /metrics`` — Prometheus text exposition: real counters/histograms
+  (flush latency/size, queue wait, sub-batch latency, request latency,
+  grants by reason) plus scrape-time samples derived from every layer's
+  plain-dict counters (broker, engine, pool, resident, store, scheduler);
+* ``GET /debug/traces`` — the flight recorder: recent trace summaries;
+  ``?id=<trace_id>`` for one full trace, ``&format=chrome`` for a
+  ``chrome://tracing`` / Perfetto-loadable document;
 * ``POST /shutdown`` — clean stop (also available as ``server.shutdown()``).
+
+Observability is ON by default (its disabled form is a set of no-op
+objects; pass ``obs=False`` to measure the difference — the
+``obs_overhead`` benchmark leg gates it at <= 5%).  Every request gets a
+trace id (client-chosen via a body ``trace_id`` or ``X-Trace-Id`` header,
+else generated) whose span tree runs admission -> scheduler queue ->
+session plan/execute -> broker flush -> per-replica oracle sub-batches,
+so each fresh label is attributable to exactly one span chain.
 """
 from __future__ import annotations
 
@@ -50,11 +65,15 @@ import threading
 import time
 from dataclasses import dataclass, field
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
+from urllib.parse import parse_qs, urlparse
 
 from repro.core.codec import result_row
 from repro.core.engine import QueryEngine, QuerySpec
 from repro.core.session import QuerySession
+from repro.obs import Observability, Sample
+from repro.obs.trace import activate, chrome_trace
+from repro.obs.trace import span as trace_span
 from repro.serve.registry import DEFAULT_WORKLOAD, WorkloadEntry, WorkloadRegistry
 from repro.serve.scheduler import DEFAULT_PRIORITY, QueryScheduler, ScheduledTask
 
@@ -76,6 +95,9 @@ class _Submission:
     session: Optional[Dict[str, Any]] = None
     error: Optional[str] = None
     status: int = 200
+    trace: Any = None        # obs Trace (NULL_TRACE when tracing is off)
+    queue_span: Any = None   # admission -> grant span, ended at grant
+    created_at: float = 0.0  # monotonic admission time (latency histogram)
 
 
 class QueryServer:
@@ -118,7 +140,8 @@ class QueryServer:
                  workload_caps: Optional[Dict[str, int]] = None,
                  preempt: bool = True,
                  preempt_slice: Optional[int] = None,
-                 default_priority: int = DEFAULT_PRIORITY):
+                 default_priority: int = DEFAULT_PRIORITY,
+                 obs: Union[Observability, bool, None] = None):
         if isinstance(source, WorkloadRegistry):
             if store is not None:
                 raise ValueError("store= only applies to the single-engine "
@@ -150,6 +173,17 @@ class QueryServer:
         }
         self._stats_lock = threading.Lock()
         self._wl_stats: Dict[str, Dict[str, int]] = {}
+        # observability: ON by default (None/True); obs=False serves with
+        # the all-no-op bundle; an Observability instance is adopted as-is
+        # (shared recorder/registry across servers, custom trace_buffer)
+        if obs is None or obs is True:
+            obs = Observability(enabled=True)
+        elif obs is False:
+            obs = Observability(enabled=False)
+        self.obs: Observability = obs
+        self.registry.set_obs(obs)
+        obs.metrics.add_collector(self._collect_derived)
+        self._h_latency: Dict[str, Any] = {}  # per-workload request latency
         self._scheduler: Optional[QueryScheduler] = None
         self._http: Optional[ThreadingHTTPServer] = None
         self._http_thread: Optional[threading.Thread] = None
@@ -186,7 +220,8 @@ class QueryServer:
             load=self._load_entry, run=self._run_batch, fail=self._fail_task,
             max_workers=self.max_workers, shares=self.shares,
             caps=self.workload_caps, admission_window=self.admission_window,
-            preempt=self.preempt, preempt_slice=self.preempt_slice)
+            preempt=self.preempt, preempt_slice=self.preempt_slice,
+            obs=self.obs)
         server = self
 
         class Handler(_Handler):
@@ -296,7 +331,8 @@ class QueryServer:
     def submit(self, specs: List[QuerySpec], budget: Optional[int] = None,
                workload: Optional[str] = None,
                priority: Optional[int] = None,
-               deadline_ms: Optional[float] = None) -> _Submission:
+               deadline_ms: Optional[float] = None,
+               trace_id: Optional[str] = None) -> _Submission:
         """Enqueue one submission with the scheduler (HTTP-free entry point;
         the handler and in-process tests both use it).  Raises
         :class:`UnknownWorkload` for unmounted names, ``ValueError`` for
@@ -307,6 +343,13 @@ class QueryServer:
         prio = self._resolve_priority(specs, priority)
         deadline_rel = self._resolve_deadline(specs, deadline_ms)
         sub = _Submission(specs=specs, budget=budget, workload=name)
+        sub.created_at = time.monotonic()
+        # the root of this request's span tree; the queue span runs from
+        # admission until _run_batch/_fail_batch closes it at grant/failure
+        sub.trace = self.obs.tracer.start(
+            "request", trace_id=trace_id, workload=name, priority=prio,
+            n_specs=len(specs))
+        sub.queue_span = sub.trace.new_span("sched.queue")
         task = ScheduledTask(workload=name, submissions=[sub], priority=prio,
                              budget=budget)
         with self._stats_lock:
@@ -343,18 +386,41 @@ class QueryServer:
                 self.stats[k] += v
                 ws[k] += v
 
+    def _finish_trace(self, sub: _Submission, **attrs: Any) -> None:
+        """Close a submission's trace into the flight recorder (no-op for
+        trace-free submissions and disabled observability)."""
+        trace = sub.trace
+        if trace is None:
+            return
+        if sub.queue_span is not None:
+            sub.queue_span.end()
+        trace.set(**attrs)
+        self.obs.tracer.finish(trace)
+
     def _fail_batch(self, workload: str, batch: List[_Submission],
                     e: Exception, status: int) -> None:
         self._bump(workload, errors=1)
         for sub in batch:
             sub.error = f"{type(e).__name__}: {e}"
             sub.status = status
+            self._finish_trace(sub, error=sub.error, status=status)
             sub.done.set()
 
     def _run_batch(self, task: ScheduledTask, entry: WorkloadEntry) -> None:
         workload, batch = task.workload, task.submissions
         specs = [s for sub in batch for s in sub.specs]
         budget = batch[0].budget if len(batch) == 1 else None
+        # the merged batch executes under the FIRST submission's trace;
+        # absorbed co-travelers close their queue span here and their root
+        # points at the primary trace that answered them
+        primary_trace = batch[0].trace
+        for sub in batch:
+            if sub.queue_span is not None:
+                sub.queue_span.end()
+        if primary_trace is not None:
+            for sub in batch[1:]:
+                if sub.trace is not None:
+                    sub.trace.set(coalesced_into=primary_trace.trace_id)
         scheduler = self._scheduler
         kw = dict(self.session_kw)
         if scheduler is not None:
@@ -363,21 +429,29 @@ class QueryServer:
             kw.setdefault("checkpoint", lambda: scheduler.checkpoint(task))
             if scheduler.preempt_slice is not None:
                 kw.setdefault("slice_size", scheduler.preempt_slice)
-        session = QuerySession(entry.engine, specs, budget=budget, **kw)
-        try:
-            # plan separately first: it spends no oracle budget, and its
-            # failures (malformed knobs, bad score names, impossible
-            # budgets) are the CLIENT's — 400
-            session.plan()
-        except Exception as e:  # noqa: BLE001 - fault barrier per batch
-            self._fail_batch(workload, batch, e, 400)
-            return
-        try:
-            out = session.execute()
-        except Exception as e:  # noqa: BLE001 - execution faults are OURS
-            self._fail_batch(workload, batch, e, 500)
-            return
+        # activate: every span opened below this thread (session prefetch,
+        # broker flush, oracle sub-batches, preempt pauses) lands on the
+        # primary trace without any layer holding a trace object
+        with activate(primary_trace):
+            session = QuerySession(entry.engine, specs, budget=budget, **kw)
+            try:
+                # plan separately first: it spends no oracle budget, and its
+                # failures (malformed knobs, bad score names, impossible
+                # budgets) are the CLIENT's — 400
+                with trace_span("session.plan", n_specs=len(specs)):
+                    session.plan()
+            except Exception as e:  # noqa: BLE001 - fault barrier per batch
+                self._fail_batch(workload, batch, e, 400)
+                return
+            try:
+                with trace_span("session.execute") as esp:
+                    out = session.execute()
+            except Exception as e:  # noqa: BLE001 - execution faults are OURS
+                self._fail_batch(workload, batch, e, 500)
+                return
         rows = [result_row(r, workload=workload) for r in out.results]
+        esp.set(fresh=out.stats.get("n_oracle_fresh"),
+                cached=out.stats.get("n_oracle_cached"))
         session = {**out.stats,
                    "workload": workload,
                    "priority": task.priority,
@@ -387,13 +461,145 @@ class QueryServer:
                    "preemptions": task.preemptions,
                    "coalesced_requests": len(batch),
                    "coalesced_specs": len(specs)}
+        now = time.monotonic()
         pos = 0
         for sub in batch:
             sub.rows = rows[pos:pos + len(sub.specs)]
             pos += len(sub.specs)
             sub.session = session
+            self._finish_trace(
+                sub, status=200,
+                fresh=sum(r["n_oracle_fresh"] for r in sub.rows),
+                cached=sum(r["n_oracle_cached"] for r in sub.rows),
+                preemptions=task.preemptions,
+                coalesced_requests=len(batch))
+            self._latency_hist(workload).observe(
+                now - (sub.created_at or task.enqueued_at))
             sub.done.set()
         self._bump(workload, sessions=1, coalesced=len(batch) - 1)
+
+    # -- observability -------------------------------------------------------
+    def _latency_hist(self, workload: str):
+        """The per-workload request-latency histogram, resolved once.  A
+        racing double-create is benign: the registry's family child() is
+        get-or-create, both racers receive the same instrument."""
+        h = self._h_latency.get(workload)
+        if h is None:
+            h = self.obs.histogram(
+                "request_latency_seconds",
+                help="submission admission-to-response latency",
+                workload=workload)
+            self._h_latency[workload] = h
+        return h
+
+    def _collect_derived(self) -> List[Sample]:
+        """Scrape-time collector: every layer keeps plain-dict counters
+        (zero registry traffic on its hot path); one pass here turns
+        consistent snapshots of them (broker counters+accounts under one
+        lock, scheduler under its condition) into Prometheus samples."""
+        out: List[Sample] = []
+
+        def c(name: str, value, help: str = "", **labels) -> None:
+            out.append(Sample(name, float(value), "counter",
+                              labels or None, help))
+
+        def g(name: str, value, help: str = "", **labels) -> None:
+            out.append(Sample(name, float(value), "gauge",
+                              labels or None, help))
+
+        with self._stats_lock:
+            wl_stats = {k: dict(v) for k, v in self._wl_stats.items()}
+            scheduler = self._scheduler
+        for name, ws in wl_stats.items():
+            for key, v in ws.items():
+                c(f"server_{key}_total", v, workload=name)
+        if scheduler is not None:
+            snap = scheduler.snapshot()
+            per_wl = snap.pop("workloads", {})
+            c("sched_submitted_total", snap["submitted"])
+            c("sched_slices_total", snap["slices"])
+            c("sched_shed_total", snap["shed"])
+            g("sched_active", snap["active"])
+            g("sched_waiting", snap["waiting"])
+            g("sched_paused", snap["paused"])
+            for name, ws in per_wl.items():
+                g("sched_queue_depth", ws["depth"], workload=name)
+                c("sched_admitted_total", ws["admitted"], workload=name)
+                c("sched_merged_total", ws["merged"], workload=name)
+                c("sched_preempted_total", ws["preempted"], workload=name)
+                g("sched_wait_max_seconds", ws["wait_max_s"], workload=name)
+        for entry in self.registry.entries():
+            if not entry.loaded:  # scraping must never trigger a lazy load
+                continue
+            name = entry.name
+            engine = entry.engine
+            broker_gauges = {"cache_size", "n_pending", "n_inflight",
+                             "max_pending"}
+            for key, v in engine.broker.observe(
+                    recent_accounts=1)["stats"].items():
+                if key in broker_gauges:
+                    g(f"oracle_{key}", v, workload=name)
+                else:
+                    c(f"oracle_{key}_total", v, workload=name)
+            for key, v in engine.stats.items():
+                c(f"engine_{key}_total", v, workload=name)
+            pool = engine.oracle_pool
+            if pool is not None:
+                ps = pool.snapshot()
+                for key in ("flushes", "dispatched", "batches", "retries",
+                            "failures", "steals"):
+                    c(f"oracle_pool_{key}_total", ps[key], workload=name)
+                for i, v in enumerate(ps["per_replica"]):
+                    c("oracle_pool_replica_batches_total", v,
+                      workload=name, replica=i)
+                for i, v in enumerate(ps["per_replica_latency_ewma_s"]):
+                    g("oracle_pool_replica_latency_ewma_seconds", v,
+                      workload=name, replica=i)
+            resident = getattr(engine, "resident", None)
+            if resident is not None:
+                for key, v in resident.stats.items():
+                    c(f"resident_{key}_total", v, workload=name)
+                g("resident_enabled", 1 if resident.enabled else 0,
+                  workload=name)
+            if entry.store is not None:
+                g("label_store_labels", len(entry.store), workload=name)
+                for key, v in entry.store.stats.items():
+                    c(f"label_store_{key}_total", v, workload=name)
+            g("index_records", engine.index.n_records, workload=name)
+            g("index_reps", engine.index.n_reps, workload=name)
+            g("index_version", engine.index.version, workload=name)
+        recorder = self.obs.recorder
+        if recorder is not None:
+            c("traces_recorded_total", recorder.recorded)
+            g("traces_buffered", len(recorder))
+        return out
+
+    def metrics_payload(self) -> str:
+        """The Prometheus text exposition (``GET /metrics`` body)."""
+        return self.obs.metrics.render()
+
+    def traces_payload(self, trace_id: Optional[str] = None,
+                       fmt: Optional[str] = None,
+                       limit: int = 32) -> Tuple[Dict[str, Any], int]:
+        """(payload, status) for ``GET /debug/traces``: recent trace
+        summaries, one full trace by id, or its Chrome-trace export."""
+        recorder = self.obs.recorder
+        if recorder is None:
+            return {"error": "observability is disabled"}, 404
+        if trace_id is None:
+            summaries = recorder.summaries()
+            if limit > 0:
+                summaries = summaries[-limit:]
+            return {"recorded": recorder.recorded,
+                    "buffered": len(recorder),
+                    "traces": summaries}, 200
+        trace = recorder.find(trace_id)
+        if trace is None:
+            return {"error": f"trace {trace_id!r} is not in the flight "
+                             f"recorder (capacity {recorder.capacity})"}, 404
+        if fmt == "chrome":
+            return chrome_trace(trace), 200
+        return trace.to_dict(), 200
 
     # -- introspection -------------------------------------------------------
     @staticmethod
@@ -402,7 +608,11 @@ class QueryServer:
         workload (the pre-registry /stats body, now per workload)."""
         engine = entry.engine
         broker = engine.broker
-        snapshot = broker.snapshot()
+        # counters AND account rows under one broker lock pass: a scrape
+        # racing a flush can never pair totals and accounts from different
+        # instants (the flush publish phase bumps both atomically)
+        observed = broker.observe(recent_accounts=32)
+        snapshot = observed["stats"]
         payload: Dict[str, Any] = {
             "engine": dict(engine.stats),
             "broker": snapshot,
@@ -411,7 +621,7 @@ class QueryServer:
                 # is bounded); "recent" is the last few specs' accounts
                 "fresh_total": snapshot["fresh"],
                 "cached_total": snapshot["cached"],
-                "recent": broker.account_stats()[-32:],
+                "recent": observed["accounts"],
             },
             "index": {"records": engine.index.n_records,
                       "reps": engine.index.n_reps,
@@ -434,12 +644,19 @@ class QueryServer:
             scheduler = self._scheduler
         sched_snap = scheduler.snapshot() if scheduler is not None else {}
         sched_wl = sched_snap.pop("workloads", {})
+        recorder = self.obs.recorder
         payload: Dict[str, Any] = {
             "server": {**server_stats,
                        "admission_window_s": self.admission_window,
                        "max_workers": self.max_workers,
                        "default_workload": default,
-                       "scheduler": sched_snap},
+                       "scheduler": sched_snap,
+                       "observability": {
+                           "enabled": self.obs.enabled,
+                           "traces_recorded": (recorder.recorded
+                                               if recorder else 0),
+                           "traces_buffered": (len(recorder)
+                                               if recorder else 0)}},
             "workloads": {},
         }
         for entry in self.registry.entries():
@@ -498,13 +715,38 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _reply_text(self, status: int, text: str) -> None:
+        body = text.encode()
+        self.send_response(status)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
     def do_GET(self) -> None:
-        if self.path == "/healthz":
+        parsed = urlparse(self.path)
+        path = parsed.path
+        if path == "/healthz":
             self._reply(200, self.owner.health_payload())
-        elif self.path == "/stats":
+        elif path == "/stats":
             self._reply(200, self.owner.stats_payload())
-        elif self.path == "/workloads":
+        elif path == "/workloads":
             self._reply(200, self.owner.workloads_payload())
+        elif path == "/metrics":
+            self._reply_text(200, self.owner.metrics_payload())
+        elif path == "/debug/traces":
+            q = parse_qs(parsed.query)
+            try:
+                limit = int(q.get("limit", ["32"])[0])
+            except ValueError:
+                self._reply(400, {"error": "limit must be an integer"})
+                return
+            payload, status = self.owner.traces_payload(
+                trace_id=q.get("id", [None])[0],
+                fmt=q.get("format", [None])[0],
+                limit=limit)
+            self._reply(status, payload)
         else:
             self._reply(404, {"error": f"unknown path {self.path}"})
 
@@ -523,6 +765,7 @@ class _Handler(BaseHTTPRequestHandler):
             length = int(self.headers.get("Content-Length", 0))
             body = json.loads(self.rfile.read(length) or b"null")
             workload = priority = deadline_ms = None
+            trace_id = self.headers.get("X-Trace-Id")
             if isinstance(body, list):
                 raw_specs, budget = body, None
             elif isinstance(body, dict):
@@ -531,6 +774,7 @@ class _Handler(BaseHTTPRequestHandler):
                 workload = body.get("workload")
                 priority = body.get("priority")
                 deadline_ms = body.get("deadline_ms")
+                trace_id = body.get("trace_id", trace_id)
             else:
                 raise ValueError(
                     "body must be a JSON list of specs or {'specs': [...], "
@@ -545,7 +789,8 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             sub = self.owner.submit(specs, budget=budget, workload=workload,
                                     priority=priority,
-                                    deadline_ms=deadline_ms)
+                                    deadline_ms=deadline_ms,
+                                    trace_id=trace_id)
         except ValueError as e:  # unknown workload / bad priority or deadline
             self._reply(400, {"error": str(e)})
             return
@@ -566,5 +811,7 @@ class _Handler(BaseHTTPRequestHandler):
                 "n_specs": len(sub.rows),
                 "fresh": sum(r["n_oracle_fresh"] for r in sub.rows),
                 "cached": sum(r["n_oracle_cached"] for r in sub.rows),
+                # "" when tracing is off (NULL_TRACE) -> omit as None
+                "trace_id": getattr(sub.trace, "trace_id", None) or None,
             },
         })

@@ -73,6 +73,11 @@ class LabelStore:
         self.fingerprint = fingerprint
         self.labels: Dict[int, Any] = dict(labels or {})
         self._lock = threading.RLock()
+        self.stats: Dict[str, int] = {
+            "journal_appends": 0,   # write-through batches journaled
+            "journal_records": 0,   # labels across those batches
+            "compactions": 0,       # save() calls (journal folded+truncated)
+        }
         # does the on-disk snapshot carry THIS store's lineage?  attach()
         # compacts first when it does not (fresh stem, or a stale store
         # from another index generation that must not be appended to)
@@ -188,6 +193,8 @@ class LabelStore:
             f.write(json.dumps(entry) + "\n")
             f.flush()
             os.fsync(f.fileno())
+        self.stats["journal_appends"] += 1
+        self.stats["journal_records"] += len(ids)
 
     def save(self) -> None:
         """Compact: atomically persist the full snapshot (both files
@@ -204,6 +211,7 @@ class LabelStore:
                 f.write(meta_body)
             self.journal_path.unlink(missing_ok=True)
             self._snapshot_valid = True
+            self.stats["compactions"] += 1
 
     # -- broker integration --------------------------------------------------
     def update(self, labeled: Dict[int, Any]) -> int:
