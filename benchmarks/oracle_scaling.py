@@ -15,12 +15,22 @@ Asserted, not just reported: >=1.5x flush-throughput speedup at 4 replicas
 over 1, and byte-identical labels plus identical fresh/cached accounting at
 every replica count (sharding must never change an answer or a charge).
 
+The **compute-bound leg** is the backend discriminator: the same flush
+against a pure-Python hot-loop oracle that *holds* the GIL.  Thread
+replicas serialize (speedup must stay < 1.3x — if they ever "pass", the
+oracle stopped being compute-bound and the leg is meaningless), while
+forked process replicas must reach >= 2.5x at 4 replicas on a >=4-core
+machine (the assert is skipped below 4 cores, where no backend could).
+Labels and accounting parity across inline/thread/process is asserted
+unconditionally.
+
     PYTHONPATH=src python -m benchmarks.oracle_scaling --quick --json out.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -33,6 +43,10 @@ REPLICA_COUNTS = (1, 2, 4)
 SPEEDUP_FLOOR = 1.5          # required flush-throughput gain at 4 replicas
 PER_BATCH_S = 0.004          # fixed cost per target_dnn_batch call
 PER_ID_S = 0.00005           # marginal cost per id
+
+COMPUTE_SPEEDUP_FLOOR = 2.5    # process backend, 4 replicas, >=4 cores
+THREAD_SPEEDUP_CEILING = 1.3   # GIL bound: thread backend cannot beat this
+COMPUTE_ITERS = 4000           # pure-Python loop iterations per id
 
 
 def _sleepy_oracle(per_batch_s: float = PER_BATCH_S,
@@ -115,9 +129,101 @@ def scaling(quick: bool = False) -> Dict[str, Dict[str, object]]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# compute-bound leg: the backend discriminator
+# ---------------------------------------------------------------------------
+def _compute_bound_oracle(iters: int = COMPUTE_ITERS):
+    """A target DNN whose cost is pure-Python bytecode — it never releases
+    the GIL, so thread replicas serialize and only process replicas scale."""
+    def annotate(ids):
+        out = []
+        for i in ids:
+            acc = 0
+            for j in range(iters):
+                acc += (j * j) % 7
+            out.append(int(i) * 2 + (acc - acc))
+        return out
+    return annotate
+
+
+def _measure_compute(backend: Optional[str], n_ids: int,
+                     max_batch: int) -> Dict[str, object]:
+    """One flush of ``n_ids`` against the compute-bound oracle: inline
+    (``backend=None``), or 4 replicas on the given backend.  Pool spawn
+    cost stays outside the timed window, like a serving deployment."""
+    annotate = _compute_bound_oracle()
+    pool = (OraclePool(annotate, n_replicas=4, backend=backend)
+            if backend is not None else None)
+    broker = OracleBroker(annotate, max_batch=max_batch, pool=pool)
+    acct = broker.account("bench")
+    try:
+        broker.request(np.arange(n_ids), account=acct)
+        t0 = time.perf_counter()
+        broker.flush()
+        flush_s = time.perf_counter() - t0
+        labels = broker.fetch(np.arange(n_ids), account=acct)
+    finally:
+        if pool is not None:
+            pool.close()
+    return {
+        "backend": backend or "inline",
+        "flush_latency_s": flush_s,
+        "labels_per_s": n_ids / max(flush_s, 1e-9),
+        "labels": labels,
+        "fresh": acct.fresh,
+        "cached": acct.cached,
+        "broker_fresh": broker.stats["fresh"],
+        "broker_cached": broker.stats["cached"],
+    }
+
+
+def compute_bound(quick: bool = False) -> Dict[str, object]:
+    """Inline vs thread vs process backend on the GIL-holding oracle, with
+    parity asserted and the backend speedup bounds enforced."""
+    n_ids = 192 if quick else 512
+    legs = {"inline": _measure_compute(None, n_ids, max_batch=32),
+            "thread": _measure_compute("thread", n_ids, max_batch=32),
+            "process": _measure_compute("process", n_ids, max_batch=32)}
+    base = legs["inline"]
+    acct_keys = ("fresh", "cached", "broker_fresh", "broker_cached")
+    for name in ("thread", "process"):
+        m = legs[name]
+        if m["labels"] != base["labels"]:
+            raise AssertionError(
+                f"{name}-backend labels differ from the inline path")
+        if any(m[k] != base[k] for k in acct_keys):
+            raise AssertionError(
+                f"{name}-backend accounting differs from inline: "
+                + ", ".join(f"{k}={m[k]} vs {base[k]}" for k in acct_keys))
+    thread_speedup = (base["flush_latency_s"]
+                      / max(legs["thread"]["flush_latency_s"], 1e-9))
+    process_speedup = (base["flush_latency_s"]
+                       / max(legs["process"]["flush_latency_s"], 1e-9))
+    if thread_speedup >= THREAD_SPEEDUP_CEILING:
+        raise AssertionError(
+            f"thread backend 'sped up' the GIL-holding oracle "
+            f"{thread_speedup:.2f}x (>= {THREAD_SPEEDUP_CEILING}x): the "
+            "compute-bound leg is no longer compute-bound")
+    cores = os.cpu_count() or 1
+    if cores >= 4 and process_speedup < COMPUTE_SPEEDUP_FLOOR:
+        raise AssertionError(
+            f"process backend speedup {process_speedup:.2f}x < required "
+            f"{COMPUTE_SPEEDUP_FLOOR}x at 4 replicas on {cores} cores "
+            f"(inline: {base['flush_latency_s']:.3f}s, process: "
+            f"{legs['process']['flush_latency_s']:.3f}s)")
+    for m in legs.values():
+        m.pop("labels")  # bulky; parity already asserted
+    return {"cpu_count": cores,
+            "thread_speedup_at_4": round(thread_speedup, 3),
+            "process_speedup_at_4": round(process_speedup, 3),
+            "process_gate_active": cores >= 4,
+            "legs": legs}
+
+
 def run(quick: bool = False) -> List[tuple]:
     """Benchmark-harness entry point: CSV rows per replica count."""
     out = scaling(quick)
+    cb = compute_bound(quick)
     rows = []
     for r in REPLICA_COUNTS:
         m = out[str(r)]
@@ -129,6 +235,9 @@ def run(quick: bool = False) -> List[tuple]:
                      round(m["queries_per_s"], 2)))
         rows.append((f"oracle_scaling/replicas_{r}", "speedup_vs_1",
                      round(m["speedup_vs_1"], 2)))
+    for name in ("thread", "process"):
+        rows.append(("oracle_scaling/compute_bound",
+                     f"{name}_speedup_at_4", cb[f"{name}_speedup_at_4"]))
     return rows
 
 
@@ -141,8 +250,10 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "bench-oracle-scaling artifact)")
     args = ap.parse_args(argv)
     out = scaling(args.quick)
+    cb = compute_bound(args.quick)
     payload = {"quick": args.quick, "speedup_floor": SPEEDUP_FLOOR,
-               "speedup_at_4": out["4"]["speedup_vs_1"], "replicas": out}
+               "speedup_at_4": out["4"]["speedup_vs_1"], "replicas": out,
+               "compute_bound": cb}
     if args.json:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

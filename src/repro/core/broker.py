@@ -31,9 +31,11 @@ well-shaped microbatches.  :class:`OracleBroker` owns exactly that seam:
   reservation is rolled back into the pending queue with no counts charged;
 * **sharded labeling** — with an :class:`~repro.core.oracle_pool.OraclePool`
   attached, each flush's microbatches are dispatched to N target-DNN replica
-  workers concurrently (work-stealing, per-sub-batch retry) and the results
+  workers concurrently (work sharing, per-sub-batch retry, thread *or*
+  forked-process replicas — the backend is invisible here) and the results
   are published in pending order, so labels, accounting, and the write-
-  through stream are byte-identical to the single-oracle path.
+  through stream are byte-identical to the single-oracle path on either
+  backend.
 """
 from __future__ import annotations
 

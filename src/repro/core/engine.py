@@ -176,6 +176,7 @@ class QueryEngine:
                  crack: bool = False, max_oracle_batch: int = 64,
                  broker: Optional[OracleBroker] = None,
                  oracle_replicas: int = 1,
+                 oracle_backend: str = "thread",
                  oracle_pool: Optional[OraclePool] = None,
                  resident: Optional[bool] = None,
                  obs=None):
@@ -197,8 +198,11 @@ class QueryEngine:
         if broker is not None and obs is not None:
             broker.set_obs(self.obs)
         # oracle sharding: >1 replicas put an OraclePool behind the broker's
-        # microbatcher; an externally-owned pool may be passed in instead
+        # microbatcher; an externally-owned pool may be passed in instead.
+        # `oracle_backend` picks thread replicas (GIL-releasing targets) or
+        # forked process replicas (compute-bound targets)
         self.oracle_replicas = max(1, int(oracle_replicas))
+        self.oracle_backend = str(oracle_backend)
         self._oracle_pool = oracle_pool
         self._owns_pool = False
         if broker is not None:
@@ -210,7 +214,7 @@ class QueryEngine:
             elif self._oracle_pool is None and self.oracle_replicas > 1:
                 self._oracle_pool = OraclePool(
                     self._annotate, n_replicas=self.oracle_replicas,
-                    obs=self.obs)
+                    backend=self.oracle_backend, obs=self.obs)
                 self._owns_pool = True
                 broker.pool = self._oracle_pool
             elif self._oracle_pool is not None:
@@ -251,7 +255,7 @@ class QueryEngine:
                 if self._oracle_pool is None and self.oracle_replicas > 1:
                     self._oracle_pool = OraclePool(
                         self._annotate, n_replicas=self.oracle_replicas,
-                        obs=self.obs)
+                        backend=self.oracle_backend, obs=self.obs)
                     self._owns_pool = True
                 self._broker = OracleBroker(self._annotate,
                                             max_batch=self.max_oracle_batch,
@@ -265,20 +269,25 @@ class QueryEngine:
         with self._lock:
             return self._oracle_pool
 
-    def set_oracle_replicas(self, n: int) -> None:
+    def set_oracle_replicas(self, n: int,
+                            backend: Optional[str] = None) -> None:
         """Resize the target-DNN replica pool (the ``oracle_replicas`` knob
-        at run time; sessions with their own setting call this).  Safe
-        between flushes: an in-flight flush keeps the pool it started with
+        at run time; sessions with their own setting call this), optionally
+        switching the replica backend at the same time.  Safe between
+        flushes: an in-flight flush keeps the pool it started with
         (``broker._label`` reads ``broker.pool`` once)."""
         n = max(1, int(n))
         with self._lock:
-            if n == self.oracle_replicas and (
-                    n == 1 or self._oracle_pool is not None):
+            backend = self.oracle_backend if backend is None else str(backend)
+            if (n == self.oracle_replicas and backend == self.oracle_backend
+                    and (n == 1 or self._oracle_pool is not None)):
                 return
             old = self._oracle_pool if self._owns_pool else None
-            pool = (OraclePool(self._annotate, n_replicas=n, obs=self.obs)
+            pool = (OraclePool(self._annotate, n_replicas=n, backend=backend,
+                               obs=self.obs)
                     if n > 1 else None)
             self.oracle_replicas = n
+            self.oracle_backend = backend
             self._oracle_pool = pool
             self._owns_pool = pool is not None
             if self._broker is not None:

@@ -125,9 +125,10 @@ class QuerySession:
     disables the preview/flush phase (labels are then fetched on demand,
     still deduped); ``n_strata`` controls the shared stratified sample;
     ``oracle_replicas`` (None = leave the engine's setting alone) resizes
-    the target-DNN replica pool behind the broker before execution — results
-    and accounting are identical at any replica count, only flush latency
-    changes.
+    the target-DNN replica pool behind the broker before execution, and
+    ``oracle_backend`` ("thread" | "process", None = keep the engine's)
+    picks its replica kind — results and accounting are identical at any
+    replica count and on either backend, only flush latency changes.
 
     ``checkpoint`` makes the session preemptible: it is called between
     ``slice_size``-id slices of every oracle interaction (prefetch flush and
@@ -143,6 +144,7 @@ class QuerySession:
                  budget: Optional[int] = None, prefetch: bool = True,
                  n_strata: int = 10, seed: int = 0,
                  oracle_replicas: Optional[int] = None,
+                 oracle_backend: Optional[str] = None,
                  checkpoint: Optional[Any] = None,
                  slice_size: Optional[int] = None):
         self.engine = engine
@@ -152,6 +154,7 @@ class QuerySession:
         self.n_strata = int(n_strata)
         self.seed = int(seed)
         self.oracle_replicas = oracle_replicas
+        self.oracle_backend = oracle_backend
         self.checkpoint = checkpoint
         self.slice_size = (int(slice_size) if slice_size
                            else engine.max_oracle_batch)
@@ -250,7 +253,8 @@ class QuerySession:
         sp = self.plan()
         engine = self.engine
         if self.oracle_replicas is not None:
-            engine.set_oracle_replicas(self.oracle_replicas)
+            engine.set_oracle_replicas(self.oracle_replicas,
+                                       backend=self.oracle_backend)
         broker = engine.broker
         accounts: List[OracleAccount] = [
             broker.account(name=f"spec{i}:{p.kind}")

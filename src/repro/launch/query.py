@@ -82,6 +82,11 @@ def main(argv=None) -> None:
                     help="target-DNN replica workers behind the broker's "
                          "microbatcher; results are identical at any count, "
                          "flushes overlap across replicas")
+    ap.add_argument("--oracle-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="replica worker kind: threads (GIL-releasing "
+                         "targets) or forked worker processes (compute-"
+                         "bound oracles; see docs/runbook.md)")
     ap.add_argument("--save-index", default=None,
                     help="path stem to persist the (possibly cracked) index")
     ap.add_argument("--spec", action="append",
@@ -109,7 +114,8 @@ def main(argv=None) -> None:
 
     engine = QueryEngine(index, wl, crack=args.crack,
                          max_oracle_batch=args.oracle_batch,
-                         oracle_replicas=args.oracle_replicas)
+                         oracle_replicas=args.oracle_replicas,
+                         oracle_backend=args.oracle_backend)
     session_stats = None
     rows = []
     if args.isolated:

@@ -86,7 +86,8 @@ def _parse_mounts(args):
             variant=args.variant, n_train=args.n_train, n_reps=args.n_reps,
             k=args.k, triplet_steps=args.triplet_steps,
             oracle_batch=args.oracle_batch,
-            oracle_replicas=args.oracle_replicas, crack=args.crack))
+            oracle_replicas=args.oracle_replicas,
+            oracle_backend=args.oracle_backend, crack=args.crack))
     return registry, multi
 
 
@@ -155,6 +156,12 @@ def main(argv=None) -> None:
                          "broker microbatcher (one pool per workload, shared "
                          "by its sessions); results are identical at any "
                          "count, flushes overlap across replicas")
+    ap.add_argument("--oracle-backend", default="thread",
+                    choices=["thread", "process"],
+                    help="replica worker kind: threads (default; right when "
+                         "the target DNN releases the GIL) or forked worker "
+                         "processes (compute-bound pure-Python/numpy "
+                         "oracles; see docs/runbook.md)")
     ap.add_argument("--crack", action="store_true",
                     help="engine-level default for the cracking feedback loop")
     ap.add_argument("--store", default=None,
@@ -186,7 +193,7 @@ def main(argv=None) -> None:
             "--" + attr.replace("_", "-")
             for attr in ("n_frames", "variant", "n_train", "n_reps", "k",
                          "triplet_steps", "quick", "oracle_batch",
-                         "oracle_replicas", "crack")
+                         "oracle_replicas", "oracle_backend", "crack")
             if getattr(args, attr) != ap.get_default(attr)]
         if overridden:
             raise SystemExit(

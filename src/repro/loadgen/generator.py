@@ -2,11 +2,21 @@
 
 :class:`OpenLoopGenerator` materializes an arrival schedule
 (:class:`~repro.loadgen.arrivals.ArrivalProcess`), samples a request per
-arrival (:class:`~repro.loadgen.mix.SpecMix`), and fires each one on its own
-thread at its scheduled time — *never* waiting for earlier requests to
-finish.  If the server falls behind, requests pile up in its queues (that is
-the point); the generator's own firing jitter is recorded separately so a
-slow harness cannot masquerade as a slow server.
+arrival (:class:`~repro.loadgen.mix.SpecMix`), and a single pacer walks the
+schedule, firing each request on its own worker thread at its scheduled
+time — *never* waiting for earlier requests to finish.  If the server falls
+behind, requests pile up in its queues (that is the point); the generator's
+own firing jitter is recorded separately so a slow harness cannot
+masquerade as a slow server.
+
+Outstanding worker threads are capped by ``max_inflight`` (default:
+unlimited).  Against a stalled server an unbounded open loop accumulates
+one parked thread per arrival, and past a few thousand the spawn cost
+itself distorts fire-lag percentiles — the harness's health metric — so a
+bounded run sheds load instead: an arrival that finds ``max_inflight``
+requests still outstanding is recorded as *dropped*
+(``error_kind="dropped"``), excluded from error counts and latency
+percentiles, and tallied in ``LoadReport.dropped`` (total and per class).
 
 ``post`` is any callable ``(specs, budget, priority, deadline_ms, name) ->
 object``; an exception marks the request failed and its message is kept.
@@ -57,7 +67,9 @@ class RequestOutcome:
     done_s: float = 0.0             # when the response (or error) landed
     ok: bool = False
     error: Optional[str] = None
-    error_kind: Optional[str] = None  # connect | http_4xx | http_5xx | other
+    # connect | http_4xx | http_5xx | other | dropped (never fired: the
+    # max_inflight cap was full at its scheduled time)
+    error_kind: Optional[str] = None
     trace_id: Optional[str] = None    # stamped when post accepts trace_id
     response: Any = None
 
@@ -100,9 +112,10 @@ class LoadReport:
     duration_s: float
     offered: int                              # scheduled arrivals
     completed: int
-    errors: int                               # total (sum of the kinds)
+    errors: int                               # fired and failed (by kind)
     connect_errors: int                       # never reached the server
     http_errors: int                          # server answered 4xx/5xx
+    dropped: int                              # never fired: inflight cap full
     max_fire_lag_ms: float                    # harness health, not server's
     classes: Dict[str, Dict[str, float]]      # per-class n/ok/errors/pXX_ms
     outcomes: List[RequestOutcome] = field(repr=False, default_factory=list)
@@ -118,16 +131,25 @@ class OpenLoopGenerator:
     *firing* is open-loop; the run still ends cleanly).  Pre-sampling the
     whole schedule before the first shot keeps sampling cost off the firing
     path and makes the request train a pure function of the seeds.
+
+    ``max_inflight`` bounds outstanding worker threads; an arrival landing
+    while the cap is full is *dropped*, not delayed — delaying it would
+    close the loop and understate offered load.  ``None`` (the default)
+    keeps the historic unbounded behavior.
     """
 
     def __init__(self, post: PostFn, mix: SpecMix, process: ArrivalProcess,
-                 duration_s: float):
+                 duration_s: float, max_inflight: Optional[int] = None):
         if duration_s <= 0:
             raise ValueError(f"duration_s must be > 0, got {duration_s}")
+        if max_inflight is not None and max_inflight <= 0:
+            raise ValueError(
+                f"max_inflight must be > 0 or None, got {max_inflight}")
         self.post = post
         self.mix = mix
         self.process = process
         self.duration_s = float(duration_s)
+        self.max_inflight = max_inflight
         self._post_takes_trace = _accepts_kwarg(post, "trace_id")
 
     def run(self) -> LoadReport:
@@ -138,15 +160,14 @@ class OpenLoopGenerator:
             plan.append((off, cls, specs, budget))
         outcomes = [RequestOutcome(name=cls.name, scheduled_s=off)
                     for off, cls, _, _ in plan]
+        slots = (threading.Semaphore(self.max_inflight)
+                 if self.max_inflight is not None else None)
         threads: List[threading.Thread] = []
         t0 = time.monotonic()
 
         def fire(i: int) -> None:
-            off, cls, specs, budget = plan[i]
+            _, cls, specs, budget = plan[i]
             out = outcomes[i]
-            delay = (t0 + off) - time.monotonic()
-            if delay > 0:
-                time.sleep(delay)
             out.fired_s = time.monotonic() - t0
             kwargs = dict(budget=budget, priority=cls.priority,
                           deadline_ms=cls.deadline_ms, name=cls.name)
@@ -159,9 +180,24 @@ class OpenLoopGenerator:
             except Exception as e:  # noqa: BLE001 - outcome, not crash
                 out.error = f"{type(e).__name__}: {e}"
                 out.error_kind = _classify_error(e)
-            out.done_s = time.monotonic() - t0
+            finally:
+                out.done_s = time.monotonic() - t0
+                if slots is not None:
+                    slots.release()
 
-        for i in range(len(plan)):
+        # one pacer walks the schedule: sleep to each arrival, then hand it
+        # to a fresh worker thread (or shed it when the cap is full)
+        for i, (off, _, _, _) in enumerate(plan):
+            delay = (t0 + off) - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            if slots is not None and not slots.acquire(blocking=False):
+                out = outcomes[i]
+                out.fired_s = out.done_s = time.monotonic() - t0
+                out.error = (f"dropped: {self.max_inflight} requests "
+                             "already in flight")
+                out.error_kind = "dropped"
+                continue
             t = threading.Thread(target=fire, args=(i,),
                                  name=f"loadgen-{i}", daemon=True)
             threads.append(t)
@@ -176,21 +212,25 @@ class OpenLoopGenerator:
         for cls in self.mix.classes:
             mine = [o for o in outcomes if o.name == cls.name]
             ok = [o for o in mine if o.ok]
+            dropped = _kind_count(mine, "dropped")
             classes[cls.name] = {
                 "n": len(mine),
                 "ok": len(ok),
-                "errors": len(mine) - len(ok),
+                "errors": len(mine) - len(ok) - dropped,
                 "connect_errors": _kind_count(mine, "connect"),
                 "http_errors": _kind_count(mine, "http_4xx", "http_5xx"),
+                "dropped": dropped,
                 **_percentiles([o.latency_s * 1e3 for o in ok]),
             }
+        dropped = _kind_count(outcomes, "dropped")
         return LoadReport(
             duration_s=self.duration_s,
             offered=len(plan),
             completed=sum(o.ok for o in outcomes),
-            errors=sum(not o.ok for o in outcomes),
+            errors=sum(not o.ok for o in outcomes) - dropped,
             connect_errors=_kind_count(outcomes, "connect"),
             http_errors=_kind_count(outcomes, "http_4xx", "http_5xx"),
+            dropped=dropped,
             max_fire_lag_ms=round(max(
                 (o.fire_lag_s * 1e3 for o in outcomes), default=0.0), 3),
             classes=classes,

@@ -70,6 +70,7 @@ class WorkloadSpec:
     triplet_steps: int = 400
     oracle_batch: int = 64
     oracle_replicas: int = 1
+    oracle_backend: str = "thread"   # replica kind: "thread" | "process"
     crack: bool = False
 
     def __post_init__(self):
@@ -150,11 +151,13 @@ class WorkloadEntry:
             out.update(records=index.n_records, reps=index.n_reps,
                        index_version=index.version,
                        oracle_replicas=self.engine.oracle_replicas,
+                       oracle_backend=self.engine.oracle_backend,
                        store_labels=(None if self.store is None
                                      else len(self.store)))
         else:
             out.update(records=spec.n_records,
                        oracle_replicas=spec.oracle_replicas,
+                       oracle_backend=spec.oracle_backend,
                        store_labels=None)
         if self._load_error is not None:
             out["error"] = str(self._load_error)
@@ -201,6 +204,7 @@ class WorkloadEntry:
         engine = QueryEngine(index, wl, crack=spec.crack,
                              max_oracle_batch=spec.oracle_batch,
                              oracle_replicas=spec.oracle_replicas,
+                             oracle_backend=spec.oracle_backend,
                              obs=scope)
         store = None
         store_stem = spec.store or spec.index

@@ -555,6 +555,12 @@ class QueryServer:
                 for i, v in enumerate(ps["per_replica_latency_ewma_s"]):
                     g("oracle_pool_replica_latency_ewma_seconds", v,
                       workload=name, replica=i)
+                for i, v in enumerate(ps["per_replica_rate_ewma"]):
+                    g("oracle_pool_replica_rate_ewma_labels_per_second", v,
+                      workload=name, replica=i)
+                for i, alive in enumerate(ps["per_replica_alive"]):
+                    g("oracle_pool_replica_alive", 1 if alive else 0,
+                      workload=name, replica=i)
             resident = getattr(engine, "resident", None)
             if resident is not None:
                 for key, v in resident.stats.items():

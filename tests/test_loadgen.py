@@ -159,6 +159,64 @@ def test_generator_counts_errors_per_class():
     assert all("RuntimeError: boom" == o.error for o in bad)
 
 
+def test_max_inflight_sheds_load_instead_of_hoarding_threads():
+    """Against a stalled server a bounded run drops arrivals beyond the cap
+    (recorded as dropped, not errors) instead of parking one thread per
+    arrival; the requests that did fire still complete and report."""
+    inflight = []
+    lock = threading.Lock()
+    gate = threading.Event()
+
+    def post(specs, budget=None, priority=None, deadline_ms=None, name=None):
+        with lock:
+            inflight.append(threading.current_thread().name)
+        gate.wait(5.0)          # stalled server: nothing completes
+        return {}
+
+    done = {}
+
+    def run():
+        done["report"] = OpenLoopGenerator(
+            post, _mix_one(), ArrivalProcess(rate=40.0, seed=0), 1.0,
+            max_inflight=3).run()
+
+    runner = threading.Thread(target=run, daemon=True)
+    runner.start()
+    time.sleep(1.3)
+    n_started = len(inflight)
+    gate.set()
+    runner.join(10.0)
+    report = done["report"]
+    assert n_started == 3                    # the cap really held
+    assert report.offered > 10
+    assert report.completed == 3
+    assert report.dropped == report.offered - 3
+    assert report.errors == 0                # drops are not server errors
+    cls = report.classes["cls"]
+    assert cls["dropped"] == report.dropped and cls["errors"] == 0
+    assert cls["ok"] == 3
+    # dropped outcomes are marked and excluded from latency percentiles
+    dropped = [o for o in report.outcomes if o.error_kind == "dropped"]
+    assert len(dropped) == report.dropped
+    assert all(not o.ok and "dropped" in o.error for o in dropped)
+    assert cls["p99_ms"] > 100.0             # percentiles: the 3 stalled oks
+
+
+def test_max_inflight_unlimited_by_default_and_validated():
+    with pytest.raises(ValueError, match="max_inflight"):
+        OpenLoopGenerator(lambda s, **kw: {}, _mix_one(),
+                          ArrivalProcess(rate=1.0), 1.0, max_inflight=0)
+    # an uncontended cap never drops: semantics match the unbounded run
+    def post(specs, budget=None, priority=None, deadline_ms=None, name=None):
+        return {}
+
+    report = OpenLoopGenerator(post, _mix_one(),
+                               ArrivalProcess(rate=30.0, seed=0), 1.0,
+                               max_inflight=64).run()
+    assert report.dropped == 0
+    assert report.completed == report.offered > 10
+
+
 def test_generator_passes_class_envelope_to_post():
     seen = []
 

@@ -1,7 +1,16 @@
 """OraclePool + broker reservation-scheme tests: sharded flushes must be
 indistinguishable from the single-oracle path (labels, order, accounting),
 survive flaky replicas by retrying sub-batches on survivors, and keep
-in-flight dedup exact while labeling happens outside the broker lock."""
+in-flight dedup exact while labeling happens outside the broker lock.
+
+The determinism/retry/rollback suite is parametrized over both replica
+backends.  Process-backend caveat for the test doubles below: forked
+children get *copies* of a parent-side oracle (its call counts, events, and
+``heal()`` are invisible across the fork), so backend-parametrized tests
+assert through broker outputs and ``pool.snapshot()`` (parent-side driver
+stats), and thread-only asserts on the doubles are gated on the backend."""
+import os
+import signal
 import threading
 import time
 
@@ -12,6 +21,8 @@ from repro.core.broker import OracleBroker
 from repro.core.oracle_pool import OraclePool, OraclePoolError
 
 pytestmark = pytest.mark.tier1
+
+BACKENDS = ("thread", "process")
 
 
 class SpyOracle:
@@ -57,9 +68,10 @@ class FlakyOracle:
 # ---------------------------------------------------------------------------
 # pool basics
 # ---------------------------------------------------------------------------
-def test_pool_labels_everything_in_request_order():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pool_labels_everything_in_request_order(backend):
     spy = SpyOracle()
-    with OraclePool(spy, n_replicas=3) as pool:
+    with OraclePool(spy, n_replicas=3, backend=backend) as pool:
         broker = OracleBroker(spy, max_batch=16, pool=pool)
         a = broker.account("a")
         ids = np.arange(100)
@@ -70,8 +82,11 @@ def test_pool_labels_everything_in_request_order():
         assert a.labeled == list(range(100))
         assert (a.fresh, a.cached) == (100, 0)
         assert broker.stats["fresh"] == 100
-        assert spy.n_labeled == 100  # no id labeled twice
-        assert pool.snapshot()["batches"] == len(spy.batches)
+        snap = pool.snapshot()
+        assert sum(snap["per_replica_ids"]) == 100  # no id labeled twice
+        if backend == "thread":
+            assert spy.n_labeled == 100
+            assert snap["batches"] == len(spy.batches)
 
 
 def test_size_aware_sharding_fans_small_flushes_out():
@@ -96,11 +111,50 @@ def test_work_stealing_routes_around_a_slow_replica():
     assert len(fast.batches) > len(slow.batches)
 
 
+def test_ewma_sizing_shrinks_slices_for_a_slow_replica():
+    slow, fast = SpyOracle(delay=0.03), SpyOracle()
+    with OraclePool(replicas=[slow, fast], oversub=2) as pool:
+        base = pool.chunk_size(128, 32)
+        for _ in range(5):
+            labels, _ = pool.run(np.arange(128), max_batch=32)
+            assert labels == {i: 2 * i for i in range(128)}
+        snap = pool.snapshot()
+    # the first run dispatches blind (no rates yet): full base-size slice
+    assert len(slow.batches[0]) == base
+    # once its labels/s EWMA is known the slow replica gets shrunken slices
+    # instead of straggling a full one
+    assert all(len(b) < base for b in slow.batches[1:])
+    assert snap["per_replica_rate_ewma"][1] > snap["per_replica_rate_ewma"][0]
+    assert snap["per_replica_ids"][0] < snap["per_replica_ids"][1]
+
+
+def test_heterogeneous_max_batches_cap_replica_slices():
+    # replica 0 is capacity-limited (max_batch 4); replica 1 takes full
+    # flush-sized slices — a heterogeneous fleet in one pool
+    small, big = SpyOracle(delay=0.01), SpyOracle()
+    with OraclePool(replicas=[small, big], max_batches=[4, 64],
+                    oversub=2) as pool:
+        labels, _ = pool.run(np.arange(96), max_batch=24)
+        assert labels == {i: 2 * i for i in range(96)}
+        snap = pool.snapshot()
+    assert max(len(b) for b in small.batches) <= 4
+    assert snap["per_replica_max_slice"][0] <= 4
+    assert 4 < snap["per_replica_max_slice"][1] <= 24
+
+
 def test_pool_rejects_bad_construction():
     with pytest.raises(ValueError, match="n_replicas"):
         OraclePool(SpyOracle(), n_replicas=0)
     with pytest.raises(ValueError, match="annotate"):
         OraclePool()
+    with pytest.raises(ValueError, match="backend"):
+        OraclePool(SpyOracle(), n_replicas=2, backend="greenlet")
+    with pytest.raises(ValueError, match="handoff"):
+        OraclePool(SpyOracle(), n_replicas=2, handoff="shm")
+    with pytest.raises(ValueError, match="max_batches"):
+        OraclePool(SpyOracle(), n_replicas=2, max_batches=[4])
+    with pytest.raises(ValueError, match="max_batches"):
+        OraclePool(SpyOracle(), n_replicas=2, max_batches=[4, 0])
     pool = OraclePool(SpyOracle(), n_replicas=1)
     pool.close()
     pool.close()  # idempotent
@@ -129,11 +183,12 @@ def _scripted_run(broker):
     return out, stats, accounts
 
 
-def test_sharded_path_identical_to_single_oracle():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sharded_path_identical_to_single_oracle(backend):
     single = _scripted_run(OracleBroker(SpyOracle(), max_batch=16))
     for n in (2, 4):
         spy = SpyOracle()
-        with OraclePool(spy, n_replicas=n) as pool:
+        with OraclePool(spy, n_replicas=n, backend=backend) as pool:
             sharded = _scripted_run(
                 OracleBroker(spy, max_batch=16, pool=pool))
         assert sharded[0] == single[0], f"labels differ at {n} replicas"
@@ -141,7 +196,8 @@ def test_sharded_path_identical_to_single_oracle():
         assert sharded[2] == single[2], f"accounts differ at {n} replicas"
 
 
-def test_engine_results_identical_across_replica_counts():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_results_identical_across_replica_counts(backend):
     from repro.core.engine import QueryEngine, QuerySpec
     from repro.core.index import TastiIndex
     from repro.core.schema import make_workload
@@ -155,8 +211,9 @@ def test_engine_results_identical_across_replica_counts():
                        budget=50),
              QuerySpec(kind="limit", score="score_has_object", k_results=3)]
 
-    def run(replicas):
-        engine = QueryEngine(index, wl, oracle_replicas=replicas)
+    def run(replicas, backend="thread"):
+        engine = QueryEngine(index, wl, oracle_replicas=replicas,
+                             oracle_backend=backend)
         out = QuerySession(engine, list(specs)).execute()
         rows = [(r.kind, r.estimate,
                  None if r.selected is None else r.selected.tolist(),
@@ -168,18 +225,19 @@ def test_engine_results_identical_across_replica_counts():
         return rows, stats
 
     base = run(1)
-    assert run(3) == base
+    assert run(3, backend=backend) == base
 
 
 # ---------------------------------------------------------------------------
 # fault injection: flaky replicas, full failure, rollback
 # ---------------------------------------------------------------------------
-def test_flaky_replica_retries_on_survivor_accounts_exact():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_flaky_replica_retries_on_survivor_accounts_exact(backend):
     bad = FlakyOracle()
     # slow survivors: the flaky replica definitely pulls (and fails) work
     # while they are busy, so the retry path really runs
     good = SpyOracle(delay=0.01)
-    with OraclePool(replicas=[bad, good, good]) as pool:
+    with OraclePool(replicas=[bad, good, good], backend=backend) as pool:
         broker = OracleBroker(good, max_batch=8, pool=pool)
         a = broker.account("a")
         broker.request(np.arange(48), account=a)
@@ -190,16 +248,20 @@ def test_flaky_replica_retries_on_survivor_accounts_exact():
             [2 * i for i in range(48)]
         assert (a.fresh, a.cached) == (48, 48)
         snap = pool.snapshot()
-    assert bad.calls >= 1              # the flaky replica was really tried
-    assert snap["failures"] == bad.calls
+    assert snap["failures"] >= 1       # the flaky replica was really tried
+    assert snap["failures"] == snap["per_replica_failures"][0]
     assert snap["retries"] >= 1        # its sub-batches moved to survivors
     assert snap["per_replica"][0] == 0
-    assert good.n_labeled == 48        # every id labeled exactly once
+    assert sum(snap["per_replica_ids"]) == 48  # every id labeled once
+    if backend == "thread":
+        assert bad.calls == snap["failures"]
+        assert good.n_labeled == 48
 
 
-def test_all_replicas_down_rolls_reservation_back_then_recovers():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_replicas_down_rolls_reservation_back_then_recovers(backend):
     bad = FlakyOracle()
-    with OraclePool(replicas=[bad, bad]) as pool:
+    with OraclePool(replicas=[bad, bad], backend=backend) as pool:
         broker = OracleBroker(bad, max_batch=8, pool=pool)
         a = broker.account("a")
         broker.request(np.arange(10), account=a)
@@ -209,10 +271,86 @@ def test_all_replicas_down_rolls_reservation_back_then_recovers():
         assert broker.n_pending == 10
         assert broker.snapshot()["n_inflight"] == 0
         assert (a.fresh, a.cached) == (0, 0) and broker.stats["fresh"] == 0
-        bad.heal()
+        if backend == "thread":
+            bad.heal()      # heals the in-process replicas directly
+        else:
+            # forked children hold their own broken copies (heal() cannot
+            # reach them): recovery means swapping in a healthy pool
+            pool.close()
+            broker.pool = pool = OraclePool(SpyOracle(), n_replicas=2,
+                                            backend=backend)
         assert broker.flush() == 10
         assert (a.fresh, a.cached) == (10, 0)
         assert a.labeled == list(range(10))
+        pool.close()
+
+
+def _kill_own_process(ids):
+    """A replica whose worker dies mid-call (crash injection)."""
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def test_process_worker_crash_retried_on_survivors():
+    # a slow survivor guarantees the doomed replica claims (and dies on) a
+    # slice instead of the survivor racing through the whole flush first
+    good = SpyOracle(delay=0.02)
+    with OraclePool(replicas=[_kill_own_process, good],
+                    backend="process") as pool:
+        broker = OracleBroker(good, max_batch=8, pool=pool)
+        a = broker.account("a")
+        broker.request(np.arange(32), account=a)
+        assert broker.flush() == 32
+        assert (a.fresh, a.cached) == (32, 0)
+        assert a.labeled == list(range(32))
+        snap = pool.snapshot()
+        assert snap["per_replica_alive"] == [False, True]
+        assert snap["per_replica"][0] == 0
+        assert snap["per_replica_failures"][0] == 1
+        assert sum(snap["per_replica_ids"]) == 32
+        # the pool keeps serving on the survivor alone
+        broker.request(np.arange(32, 40), account=a)
+        assert broker.flush() == 8
+        assert a.labeled == list(range(40))
+    assert all(not r.proc.is_alive() for r in pool._replicas)
+
+
+def test_process_all_workers_dead_fails_flush_then_pool():
+    with OraclePool(replicas=[_kill_own_process, _kill_own_process],
+                    backend="process") as pool:
+        with pytest.raises(OraclePoolError, match="failed on all"):
+            pool.run(np.arange(8), max_batch=4)
+        assert pool.snapshot()["per_replica_alive"] == [False, False]
+        # later flushes fail fast instead of hanging on dead workers
+        with pytest.raises(OraclePoolError, match="dead"):
+            pool.run(np.arange(8), max_batch=4)
+
+
+def test_process_close_reaps_children():
+    pool = OraclePool(SpyOracle(), n_replicas=3, backend="process")
+    labels, _ = pool.run(np.arange(30), max_batch=8)
+    assert labels == {i: 2 * i for i in range(30)}
+    pids = [r.proc.pid for r in pool._replicas]
+    assert all(pid is not None for pid in pids)
+    pool.close()
+    assert all(not r.proc.is_alive() for r in pool._replicas)
+    assert not os.path.isdir(pool._spool)  # npz spool dir cleaned up too
+    pool.close()  # idempotent after reaping
+
+
+def test_process_npz_handoff_roundtrips_object_labels():
+    # Scene-like object annotations must come back type-exact through the
+    # spool-file handoff (the pipe path is covered by the parity tests)
+    def annotate(ids):
+        return [{"id": int(i), "boxes": np.full((2, 4), float(i))}
+                for i in ids]
+
+    with OraclePool(annotate, n_replicas=2, backend="process",
+                    handoff="npz") as pool:
+        labels, _ = pool.run(np.arange(12), max_batch=4)
+    assert sorted(labels) == list(range(12))
+    assert labels[7]["id"] == 7
+    assert labels[7]["boxes"].shape == (2, 4)
+    assert float(labels[7]["boxes"][0, 0]) == 7.0
 
 
 # ---------------------------------------------------------------------------
@@ -315,6 +453,33 @@ def test_engine_resize_replicas_between_sessions():
     assert engine.broker.fetch(np.arange(20)) == first  # cache intact
     engine.set_oracle_replicas(1)          # back to inline
     assert engine.oracle_pool is None and engine.broker.pool is None
+    engine.close()
+
+
+def test_oracle_backend_threads_through_engine_and_session():
+    from repro.core.engine import QueryEngine, QuerySpec
+    from repro.core.index import TastiIndex
+    from repro.core.schema import make_workload
+    from repro.core.session import QuerySession
+    wl = make_workload("night-street", n_frames=200)
+    index = TastiIndex.build(wl.features, 30, wl.target_dnn_batch, k=2,
+                             random_fraction=0.0, seed=0)
+    engine = QueryEngine(index, wl, oracle_replicas=2,
+                         oracle_backend="process")
+    first = engine.broker.fetch(np.arange(20))  # lazily builds the pool
+    assert engine.oracle_pool.backend == "process"
+    # switching backend at the same replica count swaps the pool
+    engine.set_oracle_replicas(2, backend="thread")
+    assert engine.oracle_pool.backend == "thread"
+    assert engine.oracle_backend == "thread"
+    assert engine.broker.fetch(np.arange(20)) == first  # cache intact
+    # a session's oracle_backend reaches the engine (and the target-DNN
+    # Scene annotations survive the process boundary end to end)
+    spec = QuerySpec(kind="selection", score="score_has_object", budget=20)
+    out = QuerySession(engine, [spec], oracle_replicas=2,
+                       oracle_backend="process").execute()
+    assert out.results[0].kind == "selection"
+    assert engine.oracle_pool.backend == "process"
     engine.close()
 
 

@@ -1,0 +1,160 @@
+"""Docs link checker: every relative link and code reference must resolve.
+
+Scans ``docs/**/*.md``, ``ROADMAP.md``, and ``CHANGES.md`` for
+
+* **relative markdown links** — ``[text](path)`` without a URL scheme or
+  leading ``#``; resolved against the linking file's directory (anchors are
+  stripped first), and
+* **backticked code references** — ``path/to/file.py``-shaped tokens with a
+  known source extension; resolved against the repo root, ``src/``, and
+  ``src/repro/`` (so prose can say ``core/oracle_pool.py`` the way the
+  modules name themselves)
+
+and fails if any target does not exist, so renames and deletions cannot rot
+the docs silently.  Historical references (files a past PR renamed away,
+exemplar paths from related external repos) live in
+``tools/docs_link_allowlist.txt`` — one token per line, ``#`` comments.
+
+CI runs this in the lint job; ``--self-test`` verifies the checker itself
+still detects a deliberately broken link (a checker that silently passes
+everything is worse than none):
+
+    python tools/check_docs_links.py
+    python tools/check_docs_links.py --self-test
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+import tempfile
+from typing import List, Set, Tuple
+
+# [text](target) — target without whitespace; schemes/anchors filtered later
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `token.ext` with at least one path separator and a source-like extension
+_CODE_REF = re.compile(
+    r"`([A-Za-z0-9_\-./]*/[A-Za-z0-9_\-.]+\."
+    r"(?:py|md|json|jsonl|yml|yaml|toml|ini|txt|sh|cfg))`")
+
+DOC_GLOBS = ("docs/**/*.md", "ROADMAP.md", "CHANGES.md")
+#: roots a code reference may resolve against, in order
+CODE_ROOTS = ("", "src", os.path.join("src", "repro"))
+ALLOWLIST_PATH = os.path.join("tools", "docs_link_allowlist.txt")
+
+
+def _load_allowlist(root: str) -> Set[str]:
+    path = os.path.join(root, ALLOWLIST_PATH)
+    allowed: Set[str] = set()
+    if os.path.isfile(path):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line and not line.startswith("#"):
+                    allowed.add(line)
+    return allowed
+
+
+def _doc_files(root: str) -> List[str]:
+    files: List[str] = []
+    for pattern in DOC_GLOBS:
+        files.extend(sorted(glob.glob(os.path.join(root, pattern),
+                                      recursive=True)))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def _check_file(root: str, path: str,
+                allowed: Set[str]) -> List[Tuple[int, str, str]]:
+    """(line, token, problem) triples for one markdown file."""
+    problems: List[Tuple[int, str, str]] = []
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in _MD_LINK.findall(line):
+                bare = target.split("#", 1)[0]
+                if (not bare or "://" in target or target.startswith("#")
+                        or bare.startswith("mailto:")):
+                    continue
+                if bare in allowed:
+                    continue
+                if os.path.isabs(bare):
+                    problems.append((lineno, target,
+                                     "absolute link (use a relative path)"))
+                    continue
+                if not os.path.exists(os.path.normpath(
+                        os.path.join(base, bare))):
+                    problems.append((lineno, target, "broken relative link"))
+            for token in _CODE_REF.findall(line):
+                if token in allowed or token.startswith("/"):
+                    # absolute tokens are runtime paths (/tmp/...), not
+                    # repo references
+                    continue
+                if not any(os.path.isfile(os.path.normpath(
+                        os.path.join(root, r, token))) for r in CODE_ROOTS):
+                    problems.append((lineno, token,
+                                     "code reference resolves to no file "
+                                     f"under {' / '.join(x or '.' for x in CODE_ROOTS)}"))
+    return problems
+
+
+def check(root: str) -> int:
+    allowed = _load_allowlist(root)
+    files = _doc_files(root)
+    if not files:
+        print(f"check_docs_links: no doc files found under {root}",
+              file=sys.stderr)
+        return 2
+    n_problems = 0
+    for path in files:
+        for lineno, token, problem in _check_file(root, path, allowed):
+            rel = os.path.relpath(path, root)
+            print(f"{rel}:{lineno}: {problem}: {token}", file=sys.stderr)
+            n_problems += 1
+    if n_problems:
+        print(f"check_docs_links: {n_problems} broken reference(s) across "
+              f"{len(files)} file(s)", file=sys.stderr)
+        return 1
+    print(f"check_docs_links: OK ({len(files)} files)")
+    return 0
+
+
+def self_test() -> int:
+    """The checker must flag a deliberately broken link and pass a good
+    one; run by CI so a regression in the checker itself cannot hide."""
+    with tempfile.TemporaryDirectory(prefix="docs-link-selftest-") as tmp:
+        docs = os.path.join(tmp, "docs")
+        os.makedirs(docs)
+        with open(os.path.join(docs, "good.md"), "w") as f:
+            f.write("see [the index](good.md) and `docs/good.md`\n")
+        if check(tmp) != 0:
+            print("self-test FAILED: a valid doc was flagged",
+                  file=sys.stderr)
+            return 1
+        with open(os.path.join(docs, "bad.md"), "w") as f:
+            f.write("see [gone](no-such-file.md) and `src/missing.py`\n")
+        if check(tmp) != 1:
+            print("self-test FAILED: broken references were not flagged",
+                  file=sys.stderr)
+            return 1
+    print("check_docs_links: self-test OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="verify docs/ROADMAP/CHANGES file references resolve")
+    ap.add_argument("--root", default=".",
+                    help="repository root to scan (default: cwd)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the checker flags a deliberately broken "
+                         "link (and passes a valid one)")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test()
+    return check(os.path.abspath(args.root))
+
+
+if __name__ == "__main__":
+    sys.exit(main())
