@@ -125,6 +125,9 @@ class OracleBroker:
         self.pool = pool
         self.set_obs(obs)
         self.cache: Dict[int, Any] = {} if cache is None else cache
+        # tier-aware caches (the LabelStore's view) expose record_hit so
+        # cache-hit charges can be attributed to the tier that answered
+        self._record_hit = getattr(self.cache, "record_hit", None)
         self._pending: Dict[int, Optional[OracleAccount]] = {}  # id -> owner
         # ids reserved by an in-flight flush (labeled outside the lock);
         # requests for them ride along, demand-reads wait on _cond
@@ -213,6 +216,20 @@ class OracleBroker:
                     added += 1
         return added
 
+    def adopt_cache(self, cache) -> int:
+        """Swap in a replacement label cache (typically a
+        :class:`~repro.serve.store.LabelStore`'s tiered view).  Anything in
+        the current cache that the replacement does not already hold is
+        carried over, so labels paid for before the swap stay paid for.
+        Returns the number of labels the new cache serves."""
+        with self._lock:
+            old = self.cache
+            if old is not None and len(old) > 0 and old is not cache:
+                cache.update(old)
+            self.cache = cache
+            self._record_hit = getattr(cache, "record_hit", None)
+            return len(cache)
+
     def on_fresh(self, callback: Callable[[Dict[int, Any]], None]) -> None:
         """Register a write-through listener: called with ``{id: annotation}``
         after every batch of fresh labels (flush or cache-bypassing fetch),
@@ -242,6 +259,8 @@ class OracleBroker:
                         account._credit.discard(i)  # pre-paid by prefetch
                     else:
                         self.stats["cached"] += 1
+                        if self._record_hit is not None:
+                            self._record_hit(i)  # tier attribution
                         if account is not None:
                             account.cached += 1
                 elif i in self._pending or i in self._inflight:
@@ -390,6 +409,8 @@ class OracleBroker:
                         owner._credit.discard(i)  # demand read charges cached
                     else:
                         self.stats["cached"] += 1
+                        if self._record_hit is not None:
+                            self._record_hit(i)  # tier attribution
                         if owner is not None:
                             owner.cached += 1
                 else:

@@ -42,6 +42,7 @@ from repro.core.schema import WORKLOAD_NAMES
 from repro.obs import Observability
 from repro.serve.registry import WorkloadRegistry, WorkloadSpec
 from repro.serve.server import QueryServer
+from repro.serve.store.format import parse_bytes
 
 
 def _parse_mounts(args):
@@ -55,6 +56,10 @@ def _parse_mounts(args):
     if args.store and args.store_dir:
         raise SystemExit("--store and --store-dir are exclusive: one stem "
                          "vs one per-workload directory")
+    try:
+        parse_bytes(args.store_budget)
+    except ValueError as e:
+        raise SystemExit(f"--store-budget: {e}") from None
     if multi and args.store:
         raise SystemExit("--store is the single-workload form; use "
                          "--store-dir (or a manifest) for per-workload "
@@ -82,7 +87,8 @@ def _parse_mounts(args):
             store = os.path.join(args.store_dir, name)
         registry.declare(WorkloadSpec(
             name=name, dataset=dataset, n_records=args.n_frames,
-            index=index or None, store=store, quick=args.quick,
+            index=index or None, store=store,
+            store_budget=args.store_budget, quick=args.quick,
             variant=args.variant, n_train=args.n_train, n_reps=args.n_reps,
             k=args.k, triplet_steps=args.triplet_steps,
             oracle_batch=args.oracle_batch,
@@ -170,6 +176,11 @@ def main(argv=None) -> None:
     ap.add_argument("--store-dir", default=None,
                     help="directory for per-workload label stores, one "
                          "<dir>/<name> stem each (multi-workload form)")
+    ap.add_argument("--store-budget", default=None, metavar="BYTES",
+                    help="hot-tier byte budget per label store (e.g. "
+                         "67108864 or '64m'); labels past it spill to warm "
+                         "segment files on disk instead of growing the heap "
+                         "(default: unbounded)")
     ap.add_argument("--no-obs", action="store_true",
                     help="disable observability (tracing, /metrics, the "
                          "flight recorder); default: enabled — overhead is "
@@ -183,10 +194,11 @@ def main(argv=None) -> None:
         if args.workload:
             raise SystemExit("--manifest and --workload are exclusive: the "
                              "manifest declares every mount")
-        if args.store or args.store_dir or args.index:
-            raise SystemExit("--store/--store-dir/--index are exclusive "
-                             "with --manifest: manifest entries carry their "
-                             "own index and store stems")
+        if args.store or args.store_dir or args.index or args.store_budget:
+            raise SystemExit("--store/--store-dir/--store-budget/--index "
+                             "are exclusive with --manifest: manifest "
+                             "entries carry their own index and store "
+                             "configuration")
         # silently ignoring a build/oracle flag would let an operator
         # believe it took effect; manifest entries carry these per workload
         overridden = [

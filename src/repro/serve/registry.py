@@ -41,6 +41,7 @@ from repro.core.index import TastiIndex
 from repro.core.schema import WORKLOAD_NAMES, make_workload
 from repro.obs import Observability
 from repro.serve.store import LabelStore
+from repro.serve.store.format import parse_bytes
 
 #: Name the single-engine (legacy) server wraps its one workload under.
 DEFAULT_WORKLOAD = "default"
@@ -62,6 +63,10 @@ class WorkloadSpec:
     n_records: int = 8000            # workload size (n_frames for video)
     index: Optional[str] = None      # saved index stem to load
     store: Optional[str] = None      # label-store stem (default: index stem)
+    #: Hot-tier byte budget for this workload's label store (int bytes or a
+    #: "64m"-style string); None = unbounded.  Labels past the budget spill
+    #: to warm segment files instead of growing the server's heap.
+    store_budget: Optional[Any] = None
     quick: bool = False              # tiny build budgets (smoke tests / CI)
     variant: str = "T"
     n_train: int = 400
@@ -77,6 +82,13 @@ class WorkloadSpec:
         if self.dataset not in WORKLOAD_NAMES:
             raise ValueError(f"unknown dataset {self.dataset!r} for workload "
                              f"{self.name!r}; known: {list(WORKLOAD_NAMES)}")
+        try:
+            # normalize "64m"-style budgets to int bytes at declaration time
+            # so a bad manifest fails at mount, not at first lazy load
+            self.store_budget = parse_bytes(self.store_budget)
+        except ValueError as e:
+            raise ValueError(f"workload {self.name!r}: bad store_budget: "
+                             f"{e}") from None
 
     _ALIASES = {"n_frames": "n_records"}
 
@@ -209,7 +221,8 @@ class WorkloadEntry:
         store = None
         store_stem = spec.store or spec.index
         if store_stem:
-            store = LabelStore.for_index(store_stem, index)
+            store = LabelStore.for_index(store_stem, index,
+                                         hot_budget=spec.store_budget)
             self.seeded = store.attach(engine.broker, engine)
             print(f"[serve] workload {self.name}: label store "
                   f"{store.json_path}: {len(store)} labels, "

@@ -568,8 +568,41 @@ class QueryServer:
                 g("resident_enabled", 1 if resident.enabled else 0,
                   workload=name)
             if entry.store is not None:
-                g("label_store_labels", len(entry.store), workload=name)
-                for key, v in entry.store.stats.items():
+                tiers = entry.store.observe()
+                g("label_store_labels", tiers["n_labels"], workload=name)
+                g("label_store_tier_bytes", tiers["hot"]["bytes"],
+                  "resident bytes per store tier",
+                  workload=name, tier="hot")
+                g("label_store_tier_bytes", tiers["warm"]["bytes"],
+                  workload=name, tier="warm")
+                g("label_store_tier_bytes", tiers["journal"]["bytes"],
+                  workload=name, tier="journal")
+                g("label_store_tier_entries", tiers["hot"]["entries"],
+                  workload=name, tier="hot")
+                g("label_store_tier_entries", tiers["warm"]["entries"],
+                  workload=name, tier="warm")
+                if tiers["hot"]["budget"] is not None:
+                    g("label_store_hot_budget_bytes",
+                      tiers["hot"]["budget"], workload=name)
+                g("label_store_hot_pinned", tiers["hot"]["pinned"],
+                  "hot entries not yet evictable (dirty or journal-only)",
+                  workload=name)
+                c("label_store_hits_total", tiers["hits"]["hot"],
+                  "broker cache hits answered per store tier",
+                  workload=name, tier="hot")
+                c("label_store_hits_total", tiers["hits"]["warm"],
+                  workload=name, tier="warm")
+                g("label_store_warm_segments",
+                  tiers["warm"]["segments"], workload=name)
+                g("label_store_journal_segments",
+                  tiers["journal"]["segments"], workload=name)
+                g("label_store_journal_oldest_age_seconds",
+                  tiers["journal"]["oldest_age_s"],
+                  "age of the oldest un-compacted journal byte",
+                  workload=name)
+                for key, v in tiers["counters"].items():
+                    if key.startswith("hits_"):
+                        continue  # exported above, tier-labeled
                     c(f"label_store_{key}_total", v, workload=name)
             g("index_records", engine.index.n_records, workload=name)
             g("index_reps", engine.index.n_reps, workload=name)
@@ -637,9 +670,11 @@ class QueryServer:
         if pool is not None:
             payload["oracle_pool"] = pool.snapshot()
         if entry.store is not None:
+            tiers = entry.store.observe()
             payload["store"] = {"path": str(entry.store.path),
-                                "n_labels": len(entry.store),
-                                "index_version": entry.store.index_version}
+                                "n_labels": tiers["n_labels"],
+                                "index_version": entry.store.index_version,
+                                "tiers": tiers}
         return payload
 
     def stats_payload(self) -> Dict[str, Any]:

@@ -1,0 +1,283 @@
+"""Tiered LabelStore tests: journal rotation + crash replay, budgeted
+eviction that never loses a journaled label, warm-tier reads byte-identical
+to hot, v1 snapshot migration (and the torn-v1 degrade-don't-crash fix),
+tier-hit accounting, and the format helpers (byte parsing, bloom filter)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.broker import OracleBroker
+from repro.core.index import _encode_annotation
+from repro.core.schema import Scene
+from repro.serve.store import LabelStore
+from repro.serve.store import format as fmt
+from repro.serve.store.hot import CLEAN
+
+pytestmark = pytest.mark.tier1
+
+
+def _oracle(ids):
+    return [float(i) * 0.5 for i in ids]
+
+
+def _write_v1_snapshot(stem, labels, index_version=0, torn_extra_ids=0):
+    """Lay down version-1 store files by hand (one inline snapshot)."""
+    meta = {"format_version": 1, "index_version": index_version,
+            "fingerprint": None,
+            "annotations": [_encode_annotation(a) for a in labels.values()]}
+    with open(fmt.manifest_path(stem), "w") as f:
+        json.dump(meta, f)
+    ids = sorted(labels)
+    ids += list(range(10_000, 10_000 + torn_extra_ids))
+    np.savez(fmt.ids_path(stem), ids=np.asarray(ids, np.int64))
+
+
+# -- v1 compatibility ------------------------------------------------------
+def test_torn_v1_snapshot_degrades_to_empty_with_warning(tmp_path, capfd):
+    """A half-written v1 snapshot (ids/annotations length mismatch) must
+    open as an empty store with a logged warning, not crash the server —
+    labels are re-derivable, a refused startup is not."""
+    stem = tmp_path / "s"
+    _write_v1_snapshot(stem, {0: 1.0, 1: 2.0}, torn_extra_ids=3)
+    store = LabelStore.open(str(stem), 0)
+    assert len(store) == 0
+    err = capfd.readouterr().err
+    assert "[label-store]" in err and "torn" in err
+    # the degraded store is fully usable: writes persist and reload
+    store.update({7: 7.5})
+    store.save()
+    assert LabelStore.open(str(stem), 0).labels == {7: 7.5}
+
+
+def test_v1_snapshot_loads_and_migrates_to_v2(tmp_path):
+    stem = tmp_path / "s"
+    labels = {i: float(i) for i in range(20)}
+    _write_v1_snapshot(stem, labels)
+    store = LabelStore.open(str(stem), 0)
+    assert store.labels == labels
+    store.save()  # migration: next compaction writes the tiered layout
+    with open(store.json_path) as f:
+        assert json.load(f)["format_version"] == 2
+    again = LabelStore.open(str(stem), 0)
+    assert again.labels == labels
+
+
+def test_future_format_version_still_refuses(tmp_path):
+    stem = tmp_path / "s"
+    with open(fmt.manifest_path(stem), "w") as f:
+        json.dump({"format_version": 99, "index_version": 0}, f)
+    with pytest.raises(ValueError, match="format_version 99"):
+        LabelStore.open(str(stem), 0)
+
+
+# -- journal rotation + crash replay ---------------------------------------
+def test_crash_between_rotate_and_compact_replays_both_segments(tmp_path):
+    """Sealed journal segments AND the active journal both replay after a
+    crash (a rotation is not a durability boundary, only a file boundary)."""
+    stem = str(tmp_path / "s")
+    store = LabelStore(stem, journal_rotate_bytes=256, auto_compact=False)
+    broker = OracleBroker(_oracle, max_batch=8)
+    store.attach(broker)
+    broker.fetch(list(range(40)))  # several flushes; tiny threshold rotates
+    broker.fetch([40, 41, 42])     # small tail that stays in the active file
+    assert store.stats["journal_rotations"] >= 1
+    assert len(fmt.sealed_journals(store.path)) >= 1
+    assert store.journal_path.exists()  # active tail past the last rotation
+    # crash: no save(); a fresh open must replay sealed + active journals
+    revived = LabelStore.open(stem, 0)
+    assert sorted(revived.labels) == list(range(43))
+    assert revived.labels[11] == pytest.approx(5.5)
+
+
+def test_background_compaction_folds_sealed_journals(tmp_path):
+    stem = str(tmp_path / "s")
+    store = LabelStore(stem, journal_rotate_bytes=256, auto_compact=False,
+                       compact_after=1)
+    broker = OracleBroker(_oracle, max_batch=8)
+    store.attach(broker)
+    broker.fetch(list(range(40)))
+    with store._lock:
+        folded = store._compact_sealed_locked()  # what the thread runs
+    assert folded > 0
+    assert store.stats["compactions"] >= 1
+    assert not fmt.sealed_journals(store.path)  # subsumed + unlinked
+    assert LabelStore.open(stem, 0).labels == store.labels
+
+
+# -- budgets + eviction ----------------------------------------------------
+def test_eviction_under_pressure_never_loses_a_journaled_label(tmp_path):
+    """Tracked hot bytes stay under the budget at every step, and every
+    label ever journaled is still readable (hot or warm) and survives a
+    restart — eviction only ever drops warm-resident copies."""
+    stem = str(tmp_path / "s")
+    store = LabelStore(stem, hot_budget=2048, journal_rotate_bytes=256)
+    broker = OracleBroker(_oracle, max_batch=8)
+    store.attach(broker)
+    total = 300
+    for start in range(0, total, 20):
+        broker.fetch(list(range(start, start + 20)))
+        assert store._hot.bytes <= 2048  # enforced after every operation
+    assert store.stats["evictions"] > 0
+    assert len(store) == total
+    got = store.get_many(range(total), promote=False)
+    assert len(got) == total
+    assert all(got[i] == pytest.approx(i * 0.5) for i in range(total))
+    revived = LabelStore.open(stem, 0, hot_budget=2048)
+    assert len(revived) == total
+    assert revived._hot.bytes <= 2048
+
+
+def test_bare_update_is_pinned_until_saved(tmp_path):
+    """Memory-only labels (no journal yet) must never be evicted either."""
+    store = LabelStore(str(tmp_path / "s"), hot_budget=512)
+    big = {i: np.full(64, float(i)) for i in range(8)}  # way over budget
+    store.update(big)
+    assert len(store) == 8
+    assert store._hot.bytes > 512  # over budget, but nothing droppable
+    assert store.stats["evictions"] == 0
+    store.save()  # now warm-resident -> evictable
+    assert store._hot.bytes <= 512
+    assert len(store) == 8
+
+
+# -- warm-tier fidelity ----------------------------------------------------
+def test_warm_reads_are_byte_identical_to_hot(tmp_path):
+    stem = str(tmp_path / "s")
+    labels = {
+        0: np.arange(12, dtype=np.float32).reshape(3, 4),
+        1: Scene(boxes=np.asarray([[0.25, 0.5], [0.75, 0.1]])),
+        2: {"tag": "night", "scores": [1.0, 2.5], "n": 3},
+        3: "a string annotation",
+        4: None,
+        5: 42,
+    }
+    store = LabelStore(stem, labels=dict(labels))
+    hot = {i: store.broker_get(i) for i in labels}
+    store.save()
+    cold = LabelStore.open(stem, 0, hot_budget=1)  # nothing fits hot
+    for i in labels:
+        warm = cold.broker_get(i)
+        if isinstance(labels[i], np.ndarray):
+            assert warm.dtype == hot[i].dtype
+            assert np.array_equal(warm, hot[i])
+        elif isinstance(labels[i], Scene):
+            assert np.array_equal(warm.boxes, hot[i].boxes)
+        else:
+            assert warm == hot[i]
+
+
+def test_warm_lookup_skips_non_member_segments(tmp_path):
+    """Fence + bloom: misses answer without reading annotation bytes."""
+    stem = str(tmp_path / "s")
+    store = LabelStore(stem, labels={i: float(i) for i in range(100, 200)})
+    store.save()
+    cold = LabelStore.open(stem, 0)
+    assert cold._warm.get_many(range(0, 50)) == {}
+    seg = cold._warm.segments[0]
+    assert seg._mmap is None  # fences answered before any annotation read
+    assert 150 in cold and 50 not in cold
+
+
+# -- broker integration + accounting ---------------------------------------
+def test_tier_hits_plus_fresh_account_for_every_request(tmp_path):
+    """hits_hot + hits_warm + dedup_inflight + fresh == requests — the
+    accounting invariant the docs promise, across a budgeted restart."""
+    stem = str(tmp_path / "s")
+    store = LabelStore(stem, hot_budget=4096)
+    broker = OracleBroker(_oracle, max_batch=16)
+    store.attach(broker)
+    broker.fetch(list(range(120)))
+    broker.fetch(list(range(60, 180)))     # half cached, half fresh
+    broker.fetch(list(range(0, 40)))       # cached (hot or warm)
+    s, b = store.stats, broker.stats
+    assert b["fresh"] == 180
+    assert (s["hits_hot"] + s["hits_warm"] + b["dedup_inflight"]
+            + b["fresh"] == b["requests"])
+    assert s["hits_hot"] + s["hits_warm"] == b["cached"]
+    store.save()
+    # warm restart with a tiny hot tier: repeats cost ZERO fresh labels
+    cold = LabelStore.open(stem, 0, hot_budget=1024)
+    broker2 = OracleBroker(_oracle, max_batch=16)
+    assert cold.attach(broker2) == 180
+    broker2.fetch(list(range(180)))
+    assert broker2.stats["fresh"] == 0
+    assert cold.stats["hits_warm"] > 0  # the tiny hot tier can't hold all
+
+
+def test_adopt_cache_carries_prior_labels(tmp_path):
+    broker = OracleBroker(_oracle, max_batch=16)
+    broker.fetch([1, 2, 3])
+    store = LabelStore(str(tmp_path / "s"))
+    assert store.attach(broker) == 3  # pre-attach labels adopted
+    broker.fetch([1, 2, 3, 4])
+    assert broker.stats["fresh"] == 4
+    assert sorted(store.labels) == [1, 2, 3, 4]
+
+
+def test_mid_serving_fetch_promotes_warm_without_fresh(tmp_path):
+    stem = str(tmp_path / "s")
+    seed = LabelStore(stem, labels={i: float(i) for i in range(50)})
+    seed.save()
+    store = LabelStore.open(stem, 0, hot_budget=256)
+    broker = OracleBroker(_oracle, max_batch=16)
+    store.attach(broker)
+    out = broker.fetch([7, 8, 9])
+    assert out == [7.0, 8.0, 9.0]
+    assert broker.stats["fresh"] == 0
+    assert store.stats["hits_warm"] == 3
+    assert store._hot.state(9) == CLEAN  # promoted copies stay evictable
+
+
+# -- observability ---------------------------------------------------------
+def test_observe_reports_tier_sizes_and_counters(tmp_path):
+    store = LabelStore(str(tmp_path / "s"), hot_budget=4096,
+                       journal_rotate_bytes=256)
+    broker = OracleBroker(_oracle, max_batch=8)
+    store.attach(broker)
+    broker.fetch(list(range(60)))
+    obs = store.observe()
+    assert obs["n_labels"] == 60
+    assert obs["hot"]["budget"] == 4096
+    assert obs["hot"]["bytes"] <= 4096
+    assert obs["journal"]["bytes"] > 0
+    assert obs["journal"]["oldest_age_s"] >= 0.0
+    store.save()
+    obs = store.observe()
+    assert obs["journal"]["bytes"] == 0
+    assert obs["warm"]["entries"] == 60
+    assert obs["warm"]["segments"] >= 1
+    assert obs["counters"]["compactions"] >= 1
+
+
+def test_segment_count_stays_bounded(tmp_path):
+    stem = str(tmp_path / "s")
+    store = LabelStore(stem, max_segments=3)
+    for round_ in range(8):
+        store.update({round_ * 100 + i: float(i) for i in range(30)})
+        store.save()  # one new segment per save, folded past max_segments
+    assert len(store._warm.segments) <= 3
+    assert len(store) == 240
+    assert LabelStore.open(stem, 0).labels == store.labels
+
+
+# -- format helpers --------------------------------------------------------
+def test_parse_bytes_accepts_ints_and_suffixes():
+    assert fmt.parse_bytes(None) is None
+    assert fmt.parse_bytes(1024) == 1024
+    assert fmt.parse_bytes("64k") == 64 << 10
+    assert fmt.parse_bytes("1.5m") == int(1.5 * (1 << 20))
+    assert fmt.parse_bytes("2g") == 2 << 30
+    for bad in ("nope", 0, -5, "0k", True):
+        with pytest.raises(ValueError):
+            fmt.parse_bytes(bad)
+
+
+def test_bloom_filter_has_no_false_negatives():
+    rng = np.random.default_rng(0)
+    ids = np.unique(rng.integers(0, 1 << 40, size=500))
+    bits = fmt.bloom_build(ids)
+    assert fmt.bloom_maybe_contains(bits, ids).all()
+    others = np.setdiff1d(np.arange(2000, dtype=np.int64), ids)
+    fp = fmt.bloom_maybe_contains(bits, others).mean()
+    assert fp < 0.25  # ~8 bits/id, 3 hashes: false positives stay rare

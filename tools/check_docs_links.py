@@ -2,9 +2,12 @@
 
 Scans ``docs/**/*.md``, ``ROADMAP.md``, and ``CHANGES.md`` for
 
-* **relative markdown links** — ``[text](path)`` without a URL scheme or
-  leading ``#``; resolved against the linking file's directory (anchors are
-  stripped first), and
+* **relative markdown links** — ``[text](path)`` without a URL scheme;
+  resolved against the linking file's directory,
+* **anchors** — ``#fragment`` targets (same-file or on a relative ``.md``
+  link) must match a real heading of the target file, slugified the way
+  GitHub does it (lowercase, markdown formatting stripped, punctuation
+  dropped, spaces to hyphens, ``-N`` suffixes for duplicates), and
 * **backticked code references** — ``path/to/file.py``-shaped tokens with a
   known source extension; resolved against the repo root, ``src/``, and
   ``src/repro/`` (so prose can say ``core/oracle_pool.py`` the way the
@@ -30,10 +33,15 @@ import os
 import re
 import sys
 import tempfile
-from typing import List, Set, Tuple
+from typing import Dict, List, Set, Tuple
 
-# [text](target) — target without whitespace; schemes/anchors filtered later
+# [text](target) — target without whitespace; schemes filtered later
 _MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# ATX headings collected for anchor validation (fenced code excluded)
+_HEADING = re.compile(r"^#{1,6}\s+(.+?)\s*#*\s*$")
+_FENCE = re.compile(r"^\s{0,3}(```|~~~)")
+_INLINE_MD = re.compile(r"\[([^\]]*)\]\([^)]*\)")  # [text](url) -> text
+_NON_SLUG = re.compile(r"[^\w\- ]")
 # `token.ext` with at least one path separator and a source-like extension
 _CODE_REF = re.compile(
     r"`([A-Za-z0-9_\-./]*/[A-Za-z0-9_\-.]+\."
@@ -57,6 +65,39 @@ def _load_allowlist(root: str) -> Set[str]:
     return allowed
 
 
+def _slugify(heading: str) -> str:
+    """GitHub's anchor algorithm: markdown stripped, lowercased, punctuation
+    removed, spaces hyphenated."""
+    text = _INLINE_MD.sub(r"\1", heading).replace("`", "")
+    text = _NON_SLUG.sub("", text.strip().lower())
+    return text.replace(" ", "-")
+
+
+def _heading_anchors(path: str, cache: Dict[str, Set[str]]) -> Set[str]:
+    """Every anchor the markdown file at ``path`` exposes (memoized)."""
+    anchors = cache.get(path)
+    if anchors is not None:
+        return anchors
+    anchors = set()
+    counts: Dict[str, int] = {}
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if _FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING.match(line)
+            if m:
+                slug = _slugify(m.group(1))
+                n = counts.get(slug, 0)
+                counts[slug] = n + 1
+                anchors.add(slug if n == 0 else f"{slug}-{n}")
+    cache[path] = anchors
+    return anchors
+
+
 def _doc_files(root: str) -> List[str]:
     files: List[str] = []
     for pattern in DOC_GLOBS:
@@ -65,27 +106,41 @@ def _doc_files(root: str) -> List[str]:
     return [f for f in files if os.path.isfile(f)]
 
 
-def _check_file(root: str, path: str,
-                allowed: Set[str]) -> List[Tuple[int, str, str]]:
+def _check_file(root: str, path: str, allowed: Set[str],
+                anchor_cache: Dict[str, Set[str]]) -> List[Tuple[int, str, str]]:
     """(line, token, problem) triples for one markdown file."""
     problems: List[Tuple[int, str, str]] = []
     base = os.path.dirname(path)
     with open(path, encoding="utf-8") as f:
         for lineno, line in enumerate(f, 1):
             for target in _MD_LINK.findall(line):
-                bare = target.split("#", 1)[0]
-                if (not bare or "://" in target or target.startswith("#")
-                        or bare.startswith("mailto:")):
+                bare, _, frag = target.partition("#")
+                if "://" in target or bare.startswith("mailto:"):
                     continue
-                if bare in allowed:
+                if bare in allowed or target in allowed:
+                    continue
+                if not bare:
+                    # same-file anchor: must name one of this file's headings
+                    if frag and frag not in _heading_anchors(path,
+                                                             anchor_cache):
+                        problems.append((lineno, target,
+                                         "broken anchor (no such heading "
+                                         "in this file)"))
                     continue
                 if os.path.isabs(bare):
                     problems.append((lineno, target,
                                      "absolute link (use a relative path)"))
                     continue
-                if not os.path.exists(os.path.normpath(
-                        os.path.join(base, bare))):
+                resolved = os.path.normpath(os.path.join(base, bare))
+                if not os.path.exists(resolved):
                     problems.append((lineno, target, "broken relative link"))
+                    continue
+                if frag and resolved.endswith(".md") \
+                        and frag not in _heading_anchors(resolved,
+                                                         anchor_cache):
+                    problems.append((lineno, target,
+                                     "broken anchor (no such heading in "
+                                     f"{bare})"))
             for token in _CODE_REF.findall(line):
                 if token in allowed or token.startswith("/"):
                     # absolute tokens are runtime paths (/tmp/...), not
@@ -106,9 +161,11 @@ def check(root: str) -> int:
         print(f"check_docs_links: no doc files found under {root}",
               file=sys.stderr)
         return 2
+    anchor_cache: Dict[str, Set[str]] = {}
     n_problems = 0
     for path in files:
-        for lineno, token, problem in _check_file(root, path, allowed):
+        for lineno, token, problem in _check_file(root, path, allowed,
+                                                  anchor_cache):
             rel = os.path.relpath(path, root)
             print(f"{rel}:{lineno}: {problem}: {token}", file=sys.stderr)
             n_problems += 1
@@ -127,16 +184,27 @@ def self_test() -> int:
         docs = os.path.join(tmp, "docs")
         os.makedirs(docs)
         with open(os.path.join(docs, "good.md"), "w") as f:
-            f.write("see [the index](good.md) and `docs/good.md`\n")
+            f.write("# A `Good` Heading!\n"
+                    "```\n# not a heading (fenced)\n```\n"
+                    "see [the index](good.md) and `docs/good.md`,\n"
+                    "[here](#a-good-heading) and "
+                    "[also](good.md#a-good-heading)\n")
         if check(tmp) != 0:
             print("self-test FAILED: a valid doc was flagged",
                   file=sys.stderr)
             return 1
         with open(os.path.join(docs, "bad.md"), "w") as f:
-            f.write("see [gone](no-such-file.md) and `src/missing.py`\n")
+            f.write("see [gone](no-such-file.md) and `src/missing.py`,\n"
+                    "[frag](#no-such-heading) and "
+                    "[xfrag](good.md#not-a-heading-fenced)\n")
         if check(tmp) != 1:
             print("self-test FAILED: broken references were not flagged",
                   file=sys.stderr)
+            return 1
+        probs = _check_file(tmp, os.path.join(docs, "bad.md"), set(), {})
+        if sum("anchor" in p[2] for p in probs) != 2:
+            print("self-test FAILED: broken anchors were not flagged as "
+                  f"anchors: {probs}", file=sys.stderr)
             return 1
     print("check_docs_links: self-test OK")
     return 0

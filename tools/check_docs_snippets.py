@@ -1,0 +1,121 @@
+"""Docs snippet checker: ``python`` fences in the API docs must compile.
+
+Extracts every fenced ```` ```python ```` block from ``docs/api/*.md`` and
+runs it through :func:`compile` (syntax only — snippets are not executed,
+so they may reference servers, paths, and fixtures that don't exist here).
+A snippet that drifts into pseudo-code or breaks with an API rename fails
+the lint job instead of silently mis-teaching the reader.
+
+Snippets that are deliberately illustrative fragments can opt out by
+putting ``# not-runnable`` on their first line.
+
+    python tools/check_docs_snippets.py
+    python tools/check_docs_snippets.py --self-test
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+import tempfile
+from typing import List, Tuple
+
+DOC_GLOB = os.path.join("docs", "api", "*.md")
+_OPEN = re.compile(r"^\s{0,3}```python\s*$")
+_CLOSE = re.compile(r"^\s{0,3}```\s*$")
+OPT_OUT = "# not-runnable"
+
+
+def extract(path: str) -> List[Tuple[int, str]]:
+    """(first fence line, source) for each python fence in one file."""
+    snippets: List[Tuple[int, str]] = []
+    lines: List[str] = []
+    start = None
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if start is None:
+                if _OPEN.match(line):
+                    start = lineno
+                    lines = []
+            elif _CLOSE.match(line):
+                snippets.append((start, "".join(lines)))
+                start = None
+            else:
+                lines.append(line)
+    if start is not None:
+        snippets.append((start, "".join(lines)))  # unterminated: still check
+    return snippets
+
+
+def check(root: str) -> int:
+    files = sorted(glob.glob(os.path.join(root, DOC_GLOB)))
+    if not files:
+        print(f"check_docs_snippets: no files match {DOC_GLOB} under {root}",
+              file=sys.stderr)
+        return 2
+    n_snippets = 0
+    n_problems = 0
+    for path in files:
+        rel = os.path.relpath(path, root)
+        for lineno, source in extract(path):
+            if source.lstrip().startswith(OPT_OUT):
+                continue
+            n_snippets += 1
+            try:
+                compile(source, f"{rel}:{lineno}", "exec")
+            except SyntaxError as e:
+                # e.lineno is relative to the snippet; report doc-file lines
+                print(f"{rel}:{lineno + (e.lineno or 0)}: snippet does not "
+                      f"compile: {e.msg}", file=sys.stderr)
+                n_problems += 1
+    if n_problems:
+        print(f"check_docs_snippets: {n_problems} broken snippet(s) across "
+              f"{len(files)} file(s)", file=sys.stderr)
+        return 1
+    print(f"check_docs_snippets: OK ({n_snippets} snippets, "
+          f"{len(files)} files)")
+    return 0
+
+
+def self_test() -> int:
+    """The checker must flag a deliberately broken fence and pass a valid
+    one — same discipline as ``check_docs_links.py --self-test``."""
+    with tempfile.TemporaryDirectory(prefix="docs-snippet-selftest-") as tmp:
+        api = os.path.join(tmp, "docs", "api")
+        os.makedirs(api)
+        with open(os.path.join(api, "good.md"), "w") as f:
+            f.write("# Good\n```python\nstore = open_store('/tmp/x')\n```\n"
+                    "```python\n# not-runnable\nhot -> warm -> oracle\n```\n"
+                    "```\nnot python, ignored {\n```\n")
+        if check(tmp) != 0:
+            print("self-test FAILED: a valid snippet was flagged",
+                  file=sys.stderr)
+            return 1
+        with open(os.path.join(api, "bad.md"), "w") as f:
+            f.write("# Bad\n```python\ndef broken(:\n```\n")
+        if check(tmp) != 1:
+            print("self-test FAILED: a broken snippet was not flagged",
+                  file=sys.stderr)
+            return 1
+    print("check_docs_snippets: self-test OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compile-check python fences in docs/api/*.md")
+    ap.add_argument("--root", default=".",
+                    help="repository root to scan (default: cwd)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the checker flags a deliberately broken "
+                         "snippet (and passes a valid one)")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test()
+    return check(os.path.abspath(args.root))
+
+
+if __name__ == "__main__":
+    sys.exit(main())
